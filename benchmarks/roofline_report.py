@@ -1,0 +1,58 @@
+"""Render the dry-run sweep (results/dryrun/*.json) as the roofline table.
+
+One row per (arch x shape x mesh): the three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, per-device memory, and fit-16GB flag. This is
+the generator for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def load(results_dir=RESULTS):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return (f"{r['arch']},{r['shape']},{r['mesh']},SKIPPED,"
+                f"reason={r['reason'][:60]}")
+    if r["status"] == "failed":
+        return (f"{r['arch']},{r['shape']},{r['mesh']},FAILED,"
+                f"{r['error'][:80]}")
+    t = r["roofline"]
+    mem = r["memory"]
+    a = r["analytic"]
+    return (f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"compute={t['compute_s']:.4f}s,memory={t['memory_s']:.4f}s,"
+            f"collective={t['collective_s']:.4f}s,dom={t['dominant']},"
+            f"useful_ratio={a['useful_flops_ratio'] and round(a['useful_flops_ratio'],3)},"
+            f"roofline_frac={t['mfu_fraction']:.3f},"
+            f"peak_gb={mem['peak_bytes_per_device']/1e9:.2f},"
+            f"fits16gb={mem['fits_16gb_hbm']}")
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("roofline_report,no_results_yet,"
+              "run: python -m repro.launch.dryrun --all --out results/dryrun")
+        return
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    fl = sum(1 for r in rows if r["status"] == "failed")
+    print(f"roofline_report,cells={len(rows)},ok={ok},skipped={sk},failed={fl}")
+    for r in rows:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Sharded, atomic, hash-verified checkpoints in plain npz + JSON manifest.
+
+Layout:  <dir>/step_000123/
+            manifest.json   {step, tree structure, leaf dtypes/shapes, sha256}
+            arrays.npz      flat leaf arrays keyed by tree path
+
+Writes go to a tmp dir + atomic rename, so a crash mid-save never corrupts
+the latest checkpoint (fault-tolerance invariant). ``AsyncCheckpointer``
+moves serialization off the training thread. Any pytree works — model
+params, optimizer state, data cursors, and mid-solve SMO state alike.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _flatten_with_paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {_path_key(path): np.asarray(leaf) for path, leaf in leaves}
+
+
+def save(directory: str, step: int, tree: Any, *, extra: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten_with_paths(tree)
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **flat)
+    with open(npz_path, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": sorted(flat),
+        "sha256": digest,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Any, *,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved).
+
+    ``shardings``: optional matching pytree of NamedShardings — this is the
+    elastic-reshard path: the same checkpoint can be restored onto any mesh.
+    """
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    npz_path = os.path.join(path, "arrays.npz")
+    with open(npz_path, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    if digest != manifest["sha256"]:
+        raise IOError(f"checkpoint {path} corrupt: sha mismatch")
+    data = np.load(npz_path)
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_with_paths))
+    new_leaves = []
+    for (path_keys, leaf), shd in zip(leaves_with_paths, shard_leaves):
+        key = _path_key(path_keys)
+        arr = data[key]
+        if shd is not None:
+            arr = jax.device_put(arr, shd)
+        else:
+            arr = jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, "dtype")
+                              else None)
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def restore_latest(directory: str, like: Any, *, shardings: Any = None):
+    step = latest_step(directory)
+    if step is None:
+        return None, None
+    return restore(directory, step, like, shardings=shardings), step
+
+
+class AsyncCheckpointer:
+    """Serialize + write off the training thread; at most one in flight."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._inflight: Optional[Future] = None
+        self._lock = threading.Lock()
+
+    def save(self, step: int, tree: Any, *, extra: Optional[dict] = None) -> Future:
+        # Block on the previous write (bounded staleness), then snapshot to
+        # host memory synchronously so the caller may mutate afterwards.
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)
+
+        def work():
+            p = save(self.directory, step, host_tree, extra=extra)
+            self._gc()
+            return p
+
+        with self._lock:
+            self._inflight = self._pool.submit(work)
+        return self._inflight
+
+    def wait(self):
+        with self._lock:
+            f = self._inflight
+        if f is not None:
+            f.result()
+
+    def _gc(self):
+        steps = sorted(s for s in (
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)

@@ -1,0 +1,38 @@
+"""Elastic resharding: restore any checkpoint onto any mesh.
+
+Checkpoints store mesh-agnostic full arrays (manager.py gathers to host),
+so elastic rescale is just "restore with the new mesh's shardings". This
+module adds the spec re-derivation so callers only name the new mesh:
+
+    new_state = reshard_checkpoint(dir, step, like_state, new_mesh)
+
+covering the 512 -> 256 -> 128 chip scenarios (node loss, pool shrink).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint import manager
+from repro.sharding.specs import make_param_specs
+
+
+def shardings_for(like: Any, mesh: Mesh, *, fsdp: bool = True):
+    """Param-rule shardings for every leaf of a params-like tree."""
+    specs = make_param_specs(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), like), mesh,
+        fsdp=fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def reshard_checkpoint(directory: str, step: int, like: Any, mesh: Mesh, *,
+                       fsdp: bool = True):
+    return manager.restore(directory, step, like,
+                           shardings=shardings_for(like, mesh, fsdp=fsdp))
+
+
+def reshard_live(tree: Any, mesh: Mesh, *, fsdp: bool = True):
+    """Re-lay live arrays onto a new mesh (no disk round trip)."""
+    return jax.device_put(tree, shardings_for(tree, mesh, fsdp=fsdp))

@@ -1,0 +1,26 @@
+"""Architecture registry: --arch <id> -> ArchConfig."""
+from repro.configs.base import (ArchConfig, LayerSpec, SHAPES,
+                                long_context_capable)
+from repro.configs.llama3_2_3b import CONFIG as _llama
+from repro.configs.minitron_8b import CONFIG as _minitron
+from repro.configs.gemma3_27b import CONFIG as _gemma
+from repro.configs.deepseek_coder_33b import CONFIG as _deepseek
+from repro.configs.musicgen_large import CONFIG as _musicgen
+from repro.configs.arctic_480b import CONFIG as _arctic
+from repro.configs.mixtral_8x22b import CONFIG as _mixtral
+from repro.configs.jamba_1_5_large import CONFIG as _jamba
+from repro.configs.rwkv6_7b import CONFIG as _rwkv
+from repro.configs.internvl2_26b import CONFIG as _internvl
+
+ARCHS = {c.name: c for c in (
+    _llama, _minitron, _gemma, _deepseek, _musicgen,
+    _arctic, _mixtral, _jamba, _rwkv, _internvl)}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+__all__ = ["ArchConfig", "LayerSpec", "SHAPES", "ARCHS", "get_arch",
+           "long_context_capable"]

@@ -1,0 +1,21 @@
+"""repro.core — the paper's contribution: OCSSVM + fast SMO training."""
+from repro.core.kernel_fn import KernelFn, linear, poly, rbf
+from repro.core.ocssvm import (OCSSVMModel, SlabSpec, dual_objective,
+                               feasible_init, recover_rhos,
+                               with_quantile_offsets)
+from repro.core.kkt import slab_margin, violation, n_violators, converged
+from repro.core.smo import SMOResult, solve as solve_smo
+from repro.core.batched_smo import solve_blocked
+from repro.core.shrinking import solve_blocked_shrinking
+from repro.core.qp_baseline import QPResult, project_box_hyperplane, solve_qp
+from repro.core.mcc import mcc
+from repro.core.head import FittedHead, fit_head, pool_features
+from repro.core.distributed_smo import solve_blocked_distributed
+
+__all__ = [
+    "KernelFn", "linear", "rbf", "poly",
+    "OCSSVMModel", "SlabSpec", "dual_objective", "feasible_init",
+    "recover_rhos", "slab_margin", "violation", "n_violators", "converged",
+    "SMOResult", "solve_smo", "solve_blocked",
+    "QPResult", "project_box_hyperplane", "solve_qp", "mcc",
+]

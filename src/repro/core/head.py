@@ -1,0 +1,76 @@
+"""OneClassSlabHead — the paper's classifier as a first-class head on
+backbone features (the open-set-recognition integration point).
+
+Any repro.models backbone yields (batch, d_model) pooled features; this head
+fits the OCSSVM slab on them with the SMO family and scores new features.
+Feature normalization matters for kernel geometry, so the head owns a
+whitening transform (mean/scale fit on the training features).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batched_smo import solve_blocked
+from repro.core.ocssvm import OCSSVMModel, SlabSpec
+from repro.core.smo import SMOResult, solve as solve_smo
+
+Array = jax.Array
+
+
+class FittedHead(NamedTuple):
+    model: OCSSVMModel
+    mean: Array
+    scale: Array
+    result: SMOResult
+
+    def _norm(self, F: Array) -> Array:
+        return (F - self.mean) / self.scale
+
+    def score(self, F: Array) -> Array:
+        """Slab decision value; >= 0 means in-distribution."""
+        return self.model.decision_function(self._norm(F))
+
+    def predict(self, F: Array) -> Array:
+        return self.model.predict(self._norm(F))
+
+
+def pool_features(hidden: Array, mode: str = "mean") -> Array:
+    """(batch, seq, d) -> (batch, d)."""
+    if mode == "mean":
+        return hidden.mean(axis=1)
+    if mode == "last":
+        return hidden[:, -1, :]
+    raise ValueError(f"unknown pooling {mode!r}")
+
+
+def fit_head(
+    features: Array,
+    spec: SlabSpec,
+    *,
+    solver: str = "blocked",
+    P: int = 8,
+    tol: float = 1e-4,
+    normalize: bool = True,
+) -> FittedHead:
+    """Fit the OCSSVM slab on (n, d) in-distribution features."""
+    F = features.astype(jnp.float32)
+    if normalize:
+        mean = F.mean(axis=0)
+        scale = F.std(axis=0) + 1e-6
+    else:
+        mean = jnp.zeros((F.shape[1],), jnp.float32)
+        scale = jnp.ones((F.shape[1],), jnp.float32)
+    Fn = (F - mean) / scale
+    if solver == "blocked":
+        res = solve_blocked(Fn, spec, P=P, tol=tol)
+    elif solver == "paper":
+        res = solve_smo(Fn, spec, selection="paper", tol=tol)
+    elif solver == "mvp":
+        res = solve_smo(Fn, spec, selection="mvp", tol=tol)
+    else:
+        raise ValueError(f"unknown solver {solver!r}")
+    return FittedHead(model=res.model, mean=mean, scale=scale, result=res)

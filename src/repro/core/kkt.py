@@ -1,0 +1,73 @@
+"""KKT optimality conditions for the reduced OCSSVM dual (paper eq. 49-53).
+
+The five gamma-space cases, written as per-plane distance violations so all
+magnitudes share the raw-score scale (equivalent to the paper's product-form
+conditions, but numerically uniform):
+
+    gamma_i = 0          -> rho1 <= s_i <= rho2      (strict interior)
+    0 < gamma_i < hi     -> s_i = rho1               (on lower plane)
+    gamma_i = hi         -> s_i <= rho1              (below lower plane)
+    lo < gamma_i < 0     -> s_i = rho2               (on upper plane)
+    gamma_i = lo         -> s_i >= rho2              (above upper plane)
+
+``violation(...)`` returns a non-negative per-sample violation magnitude;
+the solver stops when at most one sample violates beyond ``tol`` (the
+paper's Algorithm 1 termination), or when the max violation is below tol.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ocssvm import SlabSpec
+
+Array = jax.Array
+
+
+def slab_margin(scores: Array, rho1: Array, rho2: Array) -> Array:
+    """f_bar(x) = min(s - rho1, rho2 - s) (paper eq. 56)."""
+    return jnp.minimum(scores - rho1, rho2 - scores)
+
+
+def violation(
+    gamma: Array,
+    scores: Array,
+    rho1: Array,
+    rho2: Array,
+    spec: SlabSpec,
+    bound_tol: float = 1e-8,
+) -> Array:
+    """Per-sample KKT violation magnitude (>= 0)."""
+    m = gamma.shape[0]
+    hi = spec.upper(m)
+    lo = spec.lower(m)
+    bt_hi = hi * bound_tol * m
+    bt_lo = -lo * bound_tol * m
+
+    at_zero = jnp.abs(gamma) <= jnp.minimum(bt_hi, bt_lo)
+    at_hi = gamma >= hi - bt_hi
+    at_lo = gamma <= lo + bt_lo
+    free_pos = (~at_zero) & (~at_hi) & (gamma > 0)
+    free_neg = (~at_zero) & (~at_lo) & (gamma < 0)
+
+    v_zero = jnp.maximum(jnp.maximum(rho1 - scores, scores - rho2), 0.0)
+    v_free_pos = jnp.abs(scores - rho1)
+    v_at_hi = jnp.maximum(scores - rho1, 0.0)
+    v_free_neg = jnp.abs(scores - rho2)
+    v_at_lo = jnp.maximum(rho2 - scores, 0.0)
+
+    v = jnp.where(at_zero, v_zero, 0.0)
+    v = jnp.where(free_pos, v_free_pos, v)
+    v = jnp.where(at_hi, v_at_hi, v)
+    v = jnp.where(free_neg, v_free_neg, v)
+    v = jnp.where(at_lo, v_at_lo, v)
+    return v
+
+
+def n_violators(v: Array, tol: float) -> Array:
+    return jnp.sum(v > tol)
+
+
+def converged(v: Array, tol: float) -> Array:
+    """Paper termination: at most one variable violates KKT."""
+    return n_violators(v, tol) <= 1

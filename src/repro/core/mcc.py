@@ -1,0 +1,20 @@
+"""Matthews Correlation Coefficient — the paper's evaluation metric."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def mcc(y_true: Array, y_pred: Array) -> Array:
+    """MCC for labels in {-1, +1}. Returns 0 when any marginal is empty."""
+    yt = y_true > 0
+    yp = y_pred > 0
+    tp = jnp.sum(yt & yp).astype(jnp.float32)
+    tn = jnp.sum(~yt & ~yp).astype(jnp.float32)
+    fp = jnp.sum(~yt & yp).astype(jnp.float32)
+    fn = jnp.sum(yt & ~yp).astype(jnp.float32)
+    num = tp * tn - fp * fn
+    den = jnp.sqrt((tp + fp) * (tp + fn) * (tn + fp) * (tn + fn))
+    return jnp.where(den > 0, num / den, 0.0)

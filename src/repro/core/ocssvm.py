@@ -1,0 +1,207 @@
+"""One-Class Slab SVM model state, in the paper's reduced gamma-space.
+
+The paper's key reduction (eq. 29-32): the dual depends only on
+``gamma = alpha - alpha_bar``, giving
+
+    min_gamma  1/2 gamma^T K gamma
+    s.t.       -eps/(nu2*m) <= gamma_i <= 1/(nu1*m),   sum(gamma) = 1 - eps
+
+``raw score`` s_i = sum_j gamma_j k(x_i, x_j); the slab decision is
+``sgn((s - rho1) * (rho2 - s))`` (eq. 19): +1 inside the slab, -1 outside.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fn import KernelFn
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SlabSpec:
+    """Static problem specification (nu1, nu2, eps and the kernel)."""
+
+    nu1: float = 0.5
+    nu2: float = 0.01
+    eps: float = 2.0 / 3.0
+    kernel: KernelFn = dataclasses.field(default_factory=KernelFn)
+
+    def tree_flatten(self):
+        return (self.kernel,), (self.nu1, self.nu2, self.eps)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (kernel,) = children
+        nu1, nu2, eps = aux
+        return cls(nu1=nu1, nu2=nu2, eps=eps, kernel=kernel)
+
+    # Box bounds in gamma space (eq. 31) and the equality target (eq. 32).
+    def upper(self, m: int) -> float:
+        return 1.0 / (self.nu1 * m)
+
+    def lower(self, m: int) -> float:
+        return -self.eps / (self.nu2 * m)
+
+    def total(self) -> float:
+        return 1.0 - self.eps
+
+
+class OCSSVMModel(NamedTuple):
+    """Fitted model: dual coefficients + slab offsets + the training data."""
+
+    gamma: Array  # (m,) dual coefficients alpha - alpha_bar
+    rho1: Array   # lower-plane offset
+    rho2: Array   # upper-plane offset
+    X: Array      # (m, d) training points (support data)
+    spec: SlabSpec
+
+    def raw_scores(self, Xq: Array) -> Array:
+        """s(x) = sum_j gamma_j k(x, x_j) for query points (n, d) -> (n,)."""
+        return self.spec.kernel.cross(Xq, self.X) @ self.gamma
+
+    def decision_function(self, Xq: Array) -> Array:
+        """Signed slab margin value (eq. 19 before the sgn)."""
+        s = self.raw_scores(Xq)
+        return (s - self.rho1) * (self.rho2 - s)
+
+    def predict(self, Xq: Array) -> Array:
+        """+1 inside the slab (target class), -1 outside."""
+        return jnp.where(self.decision_function(Xq) >= 0, 1, -1)
+
+
+def feasible_init(m: int, spec: SlabSpec, dtype=jnp.float32) -> Array:
+    """A strictly feasible gamma: water-fill ``1 - eps`` into the box.
+
+    Uniform (1-eps)/m works whenever it is inside the box; otherwise fill
+    the first ceil((1-eps)/hi) entries to the cap and put the remainder in
+    the next slot (general water-filling, jit-safe).
+    """
+    hi = spec.upper(m)
+    lo = spec.lower(m)
+    total = spec.total()
+    uniform = total / m
+    inside = (uniform <= hi) & (uniform >= lo)
+
+    def _uniform():
+        return jnp.full((m,), uniform, dtype)
+
+    def _waterfill():
+        # total > 0 always (eps < 1): fill caps left to right.
+        full = jnp.floor(total / hi).astype(jnp.int32)
+        idx = jnp.arange(m)
+        g = jnp.where(idx < full, hi, 0.0).astype(dtype)
+        rem = total - full.astype(dtype) * hi
+        return g.at[full].add(rem.astype(dtype))
+
+    return jax.lax.cond(inside, _uniform, _waterfill)
+
+
+def recover_rhos(
+    gamma: Array,
+    scores: Array,
+    spec: SlabSpec,
+    tol: float = 1e-6,
+) -> Tuple[Array, Array]:
+    """rho1 / rho2 from on-margin support vectors (eq. 20-21).
+
+    Lower-plane SVs: 0 < gamma < 1/(nu1 m)  -> s = rho1.
+    Upper-plane SVs: -eps/(nu2 m) < gamma < 0 -> s = rho2.
+
+    When a plane has no free SV (all at bound), fall back to the KKT
+    interval midpoint: rho1 in [max_{gamma=hi} s, min_{gamma<=0} s],
+    rho2 in [max_{gamma>=0} s, min_{gamma=lo} s].
+    """
+    m = gamma.shape[0]
+    hi = spec.upper(m)
+    lo = spec.lower(m)
+    ghi = hi * tol * m  # absolute slack scaled to the box size
+    glo = -lo * tol * m
+
+    free_lower = (gamma > ghi) & (gamma < hi - ghi)
+    free_upper = (gamma < -glo) & (gamma > lo + glo)
+
+    def _masked_mean(mask, values):
+        n = jnp.sum(mask)
+        return jnp.sum(jnp.where(mask, values, 0.0)) / jnp.maximum(n, 1), n
+
+    mean1, n1 = _masked_mean(free_lower, scores)
+    mean2, n2 = _masked_mean(free_upper, scores)
+
+    big = jnp.asarray(jnp.finfo(scores.dtype).max / 4, scores.dtype)
+    at_hi = gamma >= hi - ghi
+    at_lo = gamma <= lo + glo
+    nonneg = gamma >= -glo   # gamma >= 0 (within tol): s <= rho2 region
+    nonpos = gamma <= ghi    # gamma <= 0 (within tol): s >= rho1 region
+
+    # rho1 interval: scores of capped-at-hi points sit above rho1;
+    # scores of gamma<=0 points sit below... (s >= rho1 for gamma<=0).
+    r1_lo = jnp.max(jnp.where(at_hi, scores, -big))
+    r1_hi = jnp.min(jnp.where(nonpos, scores, big))
+    r1_mid = jnp.where(
+        (r1_lo > -big / 2) & (r1_hi < big / 2), 0.5 * (r1_lo + r1_hi),
+        jnp.where(r1_hi < big / 2, r1_hi, r1_lo))
+
+    # rho2 interval: gamma>=0 points have s <= rho2; capped-at-lo have s >= rho2.
+    r2_lo = jnp.max(jnp.where(nonneg, scores, -big))
+    r2_hi = jnp.min(jnp.where(at_lo, scores, big))
+    r2_mid = jnp.where(
+        (r2_lo > -big / 2) & (r2_hi < big / 2), 0.5 * (r2_lo + r2_hi),
+        jnp.where(r2_lo > -big / 2, r2_lo, r2_hi))
+
+    rho1 = jnp.where(n1 > 0, mean1, r1_mid)
+    rho2 = jnp.where(n2 > 0, mean2, r2_mid)
+    return rho1, rho2
+
+
+def with_quantile_offsets(model: "OCSSVMModel") -> "OCSSVMModel":
+    """Beyond-paper robustness: primal-consistent slab offsets.
+
+    KKT analysis of the reduced dual (DESIGN.md §7) shows rho1 = rho2 at
+    any optimum with free SVs on both planes — the slab collapses and the
+    sign classifier degenerates (scores still RANK correctly, since the
+    decision value is -(s - rho)^2). The primal, for the fitted w, is
+    minimized by quantile offsets instead:
+
+        d/drho1 [-rho1 + 1/(nu1 m) sum max(0, rho1 - s_i)] = 0
+            -> rho1 = nu1-quantile of scores
+        d/drho2 [ eps rho2 + eps/(nu2 m) sum max(0, s_i - rho2)] = 0
+            -> rho2 = (1 - nu2)-quantile of scores
+
+    which restores a usable slab whenever w != 0. Paper-faithful margin-SV
+    recovery (eq. 20-21) stays the default everywhere else.
+    """
+    s = model.raw_scores(model.X)
+    rho1 = jnp.quantile(s, model.spec.nu1)
+    rho2 = jnp.quantile(s, 1.0 - model.spec.nu2)
+    return model._replace(rho1=rho1, rho2=rho2)
+
+
+def dual_objective(gamma: Array, K: Array) -> Array:
+    """1/2 gamma^T K gamma (eq. 30)."""
+    return 0.5 * gamma @ (K @ gamma)
+
+
+def dual_objective_matfree(gamma: Array, X: Array, kernel: KernelFn) -> Array:
+    """Objective without materializing K — one cross-kernel pass."""
+    return 0.5 * gamma @ (kernel.cross(X, X) @ gamma) if X.shape[0] <= 4096 else _blocked_obj(gamma, X, kernel)
+
+
+def _blocked_obj(gamma: Array, X: Array, kernel: KernelFn, block: int = 2048) -> Array:
+    m = X.shape[0]
+    nblk = (m + block - 1) // block
+    pad = nblk * block - m
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    gp = jnp.pad(gamma, (0, pad))
+
+    def body(i, acc):
+        xb = jax.lax.dynamic_slice_in_dim(Xp, i * block, block)
+        gb = jax.lax.dynamic_slice_in_dim(gp, i * block, block)
+        return acc + gb @ (kernel.cross(xb, Xp) @ gp)
+
+    return 0.5 * jax.lax.fori_loop(0, nblk, body, jnp.zeros((), gamma.dtype))

@@ -1,0 +1,104 @@
+"""Generic QP baselines the paper compares SMO against.
+
+Two solvers for  min 1/2 gamma^T K gamma  s.t.  lo <= gamma <= hi,
+sum(gamma) = 1 - eps:
+
+* ``fista`` — accelerated projected gradient with the exact Euclidean
+  projection onto {box  ∩  hyperplane} (bisection on the shift multiplier);
+  Lipschitz constant from power iteration on K. This stands in for the
+  "traditional QP solver" timing baseline (weakly-polynomial interior /
+  active-set methods do not fit a jit; FISTA is the strongest JAX-native
+  generic baseline and converges to the same optimum of the convex QP).
+* ``pgd`` — plain projected gradient (no momentum), for ablation.
+
+Both are O(m^2) per iteration (full Kgamma matvec) vs SMO's O(m) — the
+scaling gap the paper's Table 1 demonstrates.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fn import KernelFn
+from repro.core.ocssvm import SlabSpec, feasible_init
+
+Array = jax.Array
+
+
+def project_box_hyperplane(v: Array, lo: float, hi: float, total: float,
+                           iters: int = 64) -> Array:
+    """Euclidean projection of v onto {lo<=x<=hi, sum(x)=total}.
+
+    Solves sum(clip(v - lam, lo, hi)) = total by bisection (monotone in lam).
+    """
+    lam_lo = jnp.min(v) - hi
+    lam_hi = jnp.max(v) - lo
+
+    def body(_, carry):
+        a, b = carry
+        mid = 0.5 * (a + b)
+        s = jnp.sum(jnp.clip(v - mid, lo, hi))
+        too_big = s > total  # need larger lam
+        return (jnp.where(too_big, mid, a), jnp.where(too_big, b, mid))
+
+    a, b = jax.lax.fori_loop(0, iters, body, (lam_lo, lam_hi))
+    lam = 0.5 * (a + b)
+    return jnp.clip(v - lam, lo, hi)
+
+
+def _power_iteration(K: Array, iters: int = 30) -> Array:
+    m = K.shape[0]
+    u = jnp.ones((m,), K.dtype) / jnp.sqrt(m)
+
+    def body(_, u):
+        w = K @ u
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+
+    u = jax.lax.fori_loop(0, iters, body, u)
+    return jnp.maximum(u @ (K @ u), 1e-12)
+
+
+class QPResult(NamedTuple):
+    gamma: Array
+    objective: Array
+    iters: Array
+
+
+@partial(jax.jit, static_argnames=("max_iters", "tol", "accelerate"))
+def solve_qp(X: Array, spec: SlabSpec, *, max_iters: int = 5000,
+             tol: float = 1e-8, accelerate: bool = True) -> QPResult:
+    """FISTA / PGD on the reduced dual with a precomputed Gram matrix."""
+    m = X.shape[0]
+    Xf = X.astype(jnp.float32)
+    K = spec.kernel.gram(Xf)
+    lo, hi, total = spec.lower(m), spec.upper(m), spec.total()
+    L = _power_iteration(K)
+    step = 1.0 / L
+
+    g0 = feasible_init(m, spec)
+
+    def obj(g):
+        return 0.5 * g @ (K @ g)
+
+    def body(carry):
+        g, y, t, it, _ = carry
+        g_new = project_box_hyperplane(y - step * (K @ y), lo, hi, total)
+        if accelerate:
+            t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            y_new = g_new + ((t - 1.0) / t_new) * (g_new - g)
+        else:
+            t_new, y_new = t, g_new
+        delta = jnp.max(jnp.abs(g_new - g))
+        return (g_new, y_new, t_new, it + 1, delta)
+
+    def cond(carry):
+        _, _, _, it, delta = carry
+        return (it < max_iters) & (delta > tol)
+
+    init = (g0, g0, jnp.ones(()), jnp.zeros((), jnp.int32),
+            jnp.asarray(jnp.inf))
+    g, _, _, it, _ = jax.lax.while_loop(cond, body, init)
+    return QPResult(gamma=g, objective=obj(g), iters=it)

@@ -1,0 +1,3 @@
+from repro.data.toy_ocssvm import make_toy
+
+__all__ = ["make_toy"]

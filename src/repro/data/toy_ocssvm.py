@@ -1,0 +1,41 @@
+"""The paper's toy dataset (Section 4 / Figs 1-2), reconstructed.
+
+Figs 1-2 show 2-D points with the learned slab (two parallel lines). We
+generate a target class concentrated in a band around a line plus a fraction
+of background anomalies, with ground-truth labels for MCC evaluation
+(+1 = target / inside-slab, -1 = anomaly).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def make_toy(key: Array, m: int, anomaly_frac: float = 0.15,
+             d: int = 2, band_width: float = 0.35,
+             direction=None) -> Tuple[Array, Array]:
+    """Returns (X, y) with y in {-1, +1}; target points live in a slab band."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n_anom = max(1, int(m * anomaly_frac))
+    n_tgt = m - n_anom
+
+    w = (jnp.ones((d,)) if direction is None else jnp.asarray(direction))
+    w = w / jnp.linalg.norm(w)
+
+    # Target: spread along the band direction, tight across it.
+    along = jax.random.normal(k1, (n_tgt, 1)) * 2.0 + 3.0
+    across = jax.random.normal(k2, (n_tgt, d)) * band_width
+    across = across - (across @ w)[:, None] * w[None, :]
+    X_tgt = along * w[None, :] + across
+
+    # Anomalies: uniform box covering the scene.
+    X_anom = jax.random.uniform(k3, (n_anom, d), minval=-4.0, maxval=10.0)
+
+    X = jnp.concatenate([X_tgt, X_anom], axis=0)
+    y = jnp.concatenate([jnp.ones((n_tgt,)), -jnp.ones((n_anom,))])
+    perm = jax.random.permutation(k4, m)
+    return X[perm], y[perm]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+gram     — tiled Gram-matrix blocks (training-time kernel evaluations)
+fupdate  — fused kernel-row evaluation + rank-2P f-cache update (SMO inner loop)
+decision — batched slab decision function (serving hot path)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper, interpret=True on CPU), ref.py (pure-jnp oracle).
+"""
+from repro.kernels.gram.ops import gram
+from repro.kernels.fupdate.ops import fupdate
+from repro.kernels.decision.ops import decision
+
+__all__ = ["gram", "fupdate", "decision"]

@@ -1,0 +1,37 @@
+"""Jit'd wrapper for the slab decision kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fn import KernelFn
+from repro.kernels.gram.ops import _auto_interpret, _pad_to
+from repro.kernels.decision.kernel import decision_pallas
+
+
+@partial(jax.jit, static_argnames=("kernel", "tm", "tn", "interpret"))
+def decision(q, t, gamma_vec, rho1, rho2, kernel: KernelFn, *,
+             tm: int = 256, tn: int = 512, interpret: bool | None = None):
+    """Slab decision values for queries q against support set (t, gamma).
+
+    Padding: extra training rows get gamma = 0 (no contribution); extra
+    query rows are sliced away; the feature dim is zero-padded (no effect
+    on dot products or norms).
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    nq = q.shape[0]
+    q = _pad_to(_pad_to(q.astype(jnp.float32), tm, 0), 128, 1)
+    t = _pad_to(_pad_to(t.astype(jnp.float32), tn, 0), 128, 1)
+    gv = _pad_to(gamma_vec.astype(jnp.float32)[:, None], tn, 0)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)
+    tn_ = jnp.sum(t * t, axis=-1, keepdims=True)
+    rho = jnp.stack([jnp.asarray(rho1, jnp.float32),
+                     jnp.asarray(rho2, jnp.float32)])[None, :]
+    out = decision_pallas(q, t, gv, rho, qn, tn_, kind=kernel.name,
+                          gamma=kernel.gamma, coef0=kernel.coef0,
+                          degree=kernel.degree, tm=tm, tn=tn,
+                          interpret=interpret)
+    return out[:nq, 0]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the slab decision kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.gram.ref import gram_ref
+
+
+def decision_ref(q, t, gamma_vec, rho1, rho2, *, kind: str,
+                 gamma: float = 1.0, coef0: float = 0.0, degree: int = 3):
+    s = gram_ref(q, t, kind=kind, gamma=gamma, coef0=coef0,
+                 degree=degree) @ gamma_vec.astype(jnp.float32)
+    return (s - rho1) * (rho2 - s)

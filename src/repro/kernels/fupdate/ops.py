@@ -1,0 +1,38 @@
+"""Jit'd wrapper for the fused SMO f-cache update."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fn import KernelFn
+from repro.kernels.gram.ops import _auto_interpret, _pad_to
+from repro.kernels.fupdate.kernel import fupdate_pallas
+
+
+@partial(jax.jit, static_argnames=("kernel", "tm", "tk", "interpret"))
+def fupdate(x, xsel, delta, f, kernel: KernelFn, *, tm: int = 512,
+            tk: int = 512, interpret: bool | None = None):
+    """f + k(x, xsel) @ delta.
+
+    x: (m, d) training rows, xsel: (s, d) the selected pair block,
+    delta: (s,) dual step, f: (m,) score cache. The selected-block axis is
+    padded to a lane multiple (128); padded deltas are zero so they do not
+    perturb f.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    m = x.shape[0]
+    x = _pad_to(_pad_to(x.astype(jnp.float32), tm, 0), tk, 1)
+    xsel = _pad_to(_pad_to(xsel.astype(jnp.float32), 128, 0), tk, 1)
+    s = xsel.shape[0]
+    delta = _pad_to(delta.astype(jnp.float32)[:, None], 128, 0)
+    f2 = _pad_to(f.astype(jnp.float32)[:, None], tm, 0)
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)
+    seln = jnp.sum(xsel * xsel, axis=-1, keepdims=True)
+    out = fupdate_pallas(x, xsel, delta, f2, xn, seln, kind=kernel.name,
+                         gamma=kernel.gamma, coef0=kernel.coef0,
+                         degree=kernel.degree, tm=tm, tk=tk,
+                         interpret=interpret)
+    return out[:m, 0]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused f-cache update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.gram.ref import gram_ref
+
+
+def fupdate_ref(x, xsel, delta, f, *, kind: str, gamma: float = 1.0,
+                coef0: float = 0.0, degree: int = 3):
+    krows = gram_ref(x, xsel, kind=kind, gamma=gamma, coef0=coef0,
+                     degree=degree)
+    return f.astype(jnp.float32) + krows @ delta.astype(jnp.float32)

@@ -1,0 +1,46 @@
+"""Jit'd public wrapper for the tiled Gram kernel.
+
+Pads inputs to tile multiples, dispatches to the Pallas kernel (interpret
+mode on non-TPU backends so the same code path is exercised on CPU), and
+slices the result back. Padding rows/features are zeros: they contribute 0
+to dot products and norms, and padded outputs are discarded by the slice.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fn import KernelFn
+from repro.kernels.gram.kernel import gram_pallas
+
+
+def _pad_to(a, mult, axis):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("kernel", "tm", "tn", "tk", "interpret"))
+def gram(x, y, kernel: KernelFn, *, tm: int = 256, tn: int = 256,
+         tk: int = 512, interpret: bool | None = None):
+    """K[i, j] = k(x_i, y_j) via the tiled Pallas kernel."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    M, N = x.shape[0], y.shape[0]
+    x = _pad_to(_pad_to(x.astype(jnp.float32), tm, 0), tk, 1)
+    y = _pad_to(_pad_to(y.astype(jnp.float32), tn, 0), tk, 1)
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)
+    yn = jnp.sum(y * y, axis=-1, keepdims=True)
+    out = gram_pallas(x, y, xn, yn, kind=kernel.name, gamma=kernel.gamma,
+                      coef0=kernel.coef0, degree=kernel.degree,
+                      tm=tm, tn=tn, tk=tk, interpret=interpret)
+    return out[:M, :N]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the tiled Gram kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(x, y, *, kind: str, gamma: float = 1.0, coef0: float = 0.0,
+             degree: int = 3):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    dot = x @ y.T
+    if kind == "linear":
+        return dot
+    if kind == "rbf":
+        xx = jnp.sum(x * x, axis=-1, keepdims=True)
+        yy = jnp.sum(y * y, axis=-1, keepdims=True)
+        sq = xx + yy.T - 2.0 * dot
+        return jnp.exp(-gamma * jnp.maximum(sq, 0.0))
+    if kind == "poly":
+        return (gamma * dot + coef0) ** degree
+    raise ValueError(kind)

@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything below is ordinary code.
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_arch, long_context_capable  # noqa: E402
+from repro.launch.mesh import make_production_mesh                        # noqa: E402
+from repro.launch.specs import (batch_sds_and_shardings, cache_sds,        # noqa: E402
+                                decode_specs, param_shardings, params_sds,
+                                train_state_sds, train_state_shardings)
+from repro.sharding.specs import make_constrain                            # noqa: E402
+from repro.train.serve_step import make_decode, make_prefill               # noqa: E402
+from repro.train.train_step import make_train_step                         # noqa: E402
+from repro.utils import hlo_analysis, roofline                             # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: a successful
+``.lower().compile()`` on the 16x16 single-pod and 2x16x16 multi-pod host
+meshes means shardings divide, collectives are legal, and the memory
+analysis is available for the roofline report.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/
+"""
+
+# FSDP (ZeRO-3 weight sharding over "data") on for everything that needs it;
+# small models keep pure TP+DP which is faster at their scale.
+FSDP_MIN_PARAMS = 4e9
+
+
+def should_skip(arch: str, shape_name: str) -> str:
+    cfg = get_arch(arch)
+    if shape_name == "long_500k" and not long_context_capable(cfg):
+        return ("pure full-attention arch: 500k dense-KV decode excluded "
+                "per the long_500k sub-quadratic policy (DESIGN.md)")
+    return ""
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               fsdp=None, q_chunk: int = 1024, layout: str = "tp",
+               extra_tag: str = ""):
+    cfg = get_arch(arch)
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if fsdp is None:
+        fsdp = cfg.param_count() >= FSDP_MIN_PARAMS
+    constrain = make_constrain(mesh, fsdp=fsdp, layout=layout)
+
+    with mesh:
+        if sh["step"] == "train":
+            state_sds = train_state_sds(cfg)
+            state_shd = train_state_shardings(cfg, mesh, fsdp=fsdp,
+                                              layout=layout)
+            b_sds, b_shd = batch_sds_and_shardings(cfg, mesh, sh["batch"],
+                                                   sh["seq_len"],
+                                                   layout=layout)
+            # Auto gradient accumulation: ~2 sequences per device per
+            # microbatch (1 for deep/wide models) so activation residuals
+            # and attention-score transients fit HBM.
+            dp = 1
+            axes = (("pod", "data", "model") if layout == "fsdp"
+                    else ("pod", "data"))
+            for ax in axes:
+                if ax in mesh.axis_names:
+                    dp *= mesh.shape[ax]
+            b_loc = max(1, sh["batch"] // dp)
+            big = cfg.n_layers * cfg.d_model >= 250_000
+            microbatches = b_loc if big else max(1, b_loc // 2)
+            step = make_train_step(cfg, constrain=constrain,
+                                   microbatches=microbatches)
+            lowered = jax.jit(step, in_shardings=(state_shd, b_shd),
+                              out_shardings=(state_shd, None),
+                              donate_argnums=(0,)).lower(state_sds, b_sds)
+        elif sh["step"] == "prefill":
+            p_sds = params_sds(cfg)
+            p_shd = param_shardings(cfg, mesh, fsdp=fsdp)
+            c_sds, c_shd, _, _ = decode_specs(cfg, mesh, sh["batch"],
+                                              sh["seq_len"])
+            b_sds, b_shd = batch_sds_and_shardings(cfg, mesh, sh["batch"],
+                                                   sh["seq_len"])
+            b_sds.pop("labels")
+            b_shd.pop("labels")
+            fn = make_prefill(cfg, constrain=constrain, q_chunk=q_chunk)
+            lowered = jax.jit(fn, in_shardings=(p_shd, c_shd, b_shd),
+                              out_shardings=(None, c_shd),
+                              donate_argnums=(1,)).lower(p_sds, c_sds, b_sds)
+        else:  # decode
+            p_sds = params_sds(cfg)
+            p_shd = param_shardings(cfg, mesh, fsdp=fsdp)
+            c_sds, c_shd, tok_sds, tok_shd = decode_specs(
+                cfg, mesh, sh["batch"], sh["seq_len"])
+            fn = make_decode(cfg, constrain=constrain)
+            lowered = jax.jit(fn, in_shardings=(p_shd, c_shd, tok_shd),
+                              out_shardings=(None, c_shd),
+                              donate_argnums=(1,)).lower(p_sds, c_sds,
+                                                         tok_sds)
+    return cfg, mesh, lowered
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             fsdp=None, q_chunk: int = 1024, layout: str = "tp") -> dict:
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "layout": layout,
+        "status": "ok",
+    }
+    skip = should_skip(arch, shape_name)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+    t0 = time.time()
+    try:
+        cfg, mesh, lowered = lower_cell(arch, shape_name,
+                                        multi_pod=multi_pod, fsdp=fsdp,
+                                        q_chunk=q_chunk, layout=layout)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes_per_device": int(mem.argument_size_in_bytes),
+            "output_bytes_per_device": int(mem.output_size_in_bytes),
+            "temp_bytes_per_device": int(mem.temp_size_in_bytes),
+            "alias_bytes_per_device": int(mem.alias_size_in_bytes),
+        }
+        peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        rec["memory"]["peak_bytes_per_device"] = int(peak)
+        rec["memory"]["fits_16gb_hbm"] = bool(peak < 16e9)
+
+        xla_cost = compiled.cost_analysis()
+        rec["xla_cost"] = {
+            "flops_body_once": float(xla_cost.get("flops", -1.0)),
+            "bytes_accessed_body_once": float(
+                xla_cost.get("bytes accessed", -1.0)),
+        }
+
+        text = compiled.as_text()
+        chips = mesh.size
+        # The compiled module is the per-device program: scale by chips.
+        cost = hlo_analysis.analyze(text, n_devices=chips)
+        hlo_flops = cost.flops * chips
+        hlo_bytes_ub = cost.bytes * chips       # upper bound (CPU fusion)
+        coll_bytes = cost.collective_bytes * chips
+        analytic_flops = roofline.model_flops(cfg, shape_name)
+        analytic_bytes = roofline.model_hbm_bytes(cfg, shape_name, chips)
+        # Roofline terms: compute + collectives from the compiled HLO
+        # (trip-count-scaled), memory from the analytic inventory — the
+        # CPU backend's fusion boundaries overcount TPU HBM traffic
+        # (methodology in EXPERIMENTS.md §Roofline).
+        terms = roofline.terms(hlo_flops, analytic_bytes, coll_bytes, chips)
+        rec["hlo_cost"] = {
+            "flops_trip_scaled": hlo_flops,
+            "hbm_bytes_upper_bound": hlo_bytes_ub,
+            "collective_bytes": coll_bytes,
+            "collectives": {k: v * chips for k, v in cost.coll.items()},
+        }
+        rec["analytic"] = {
+            "model_flops": analytic_flops,
+            "model_hbm_bytes": analytic_bytes,
+            "useful_flops_ratio": (analytic_flops / hlo_flops
+                                   if hlo_flops else None),
+        }
+        rec["roofline"] = terms.to_dict()
+        rec["roofline"]["mfu_fraction"] = roofline.mfu_fraction(
+            terms, analytic_flops)
+        # roofline fraction using analytic FLOPs as the useful-work yardstick
+    except Exception as e:  # noqa: BLE001 — record, continue the sweep
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="all archs x shapes, single-pod + multi-pod")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--q-chunk", type=int, default=1024)
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if (args.all or args.arch == "all") else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape == "all") else [args.shape]
+    meshes = ([False, True] if (args.all or args.mesh == "both")
+              else [args.mesh == "multi"])
+    fsdp = None if args.fsdp == "auto" else (args.fsdp == "on")
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for multi_pod in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                rec = run_cell(arch, shape, multi_pod=multi_pod, fsdp=fsdp,
+                               q_chunk=args.q_chunk)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" compile={rec['compile_s']}s "
+                             f"dominant={rec['roofline']['dominant']} "
+                             f"peak/dev={rec['memory']['peak_bytes_per_device']/1e9:.2f}GB")
+                elif status == "failed":
+                    extra = " " + rec["error"][:200]
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

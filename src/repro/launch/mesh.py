@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state. Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod: (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis composes with "data" for batch sharding; only DP-style
+all-reduces cross the inter-pod links.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before importing jax (dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Small meshes for CPU tests (e.g. (1,1) or (2,2))."""
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -1,0 +1,188 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape x step).
+
+``input_specs`` returns everything ``dryrun.py``/``train.py`` need to lower
+a step function without allocating a single parameter: weak-type-correct
+ShapeDtypeStructs for params, optimizer state, KV caches and batches, plus
+the matching NamedShardings derived from the sharding rules.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES
+from repro.models.transformer import init_cache, init_params
+from repro.optim.adafactor import AdafactorState
+from repro.optim.adamw import AdamWState
+from repro.sharding.specs import (batch_axes, make_cache_shardings,
+                                  make_param_specs)
+from repro.train.train_step import TrainState
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def params_sds(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def cache_sds(cfg: ArchConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len,
+                                             dtype=cfg.dtype))
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, *, fsdp: bool = True,
+                    layout: str = "tp"):
+    specs = make_param_specs(params_sds(cfg), mesh, fsdp=fsdp, layout=layout,
+                             moe_layout=cfg.moe_impl)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def _drop_axis(spec: P, k: int) -> P:
+    """Spec for a factored-moment leaf (last k axes removed)."""
+    t = tuple(spec)
+    return P(*t[:-k]) if len(t) >= k else P(*t)
+
+
+def opt_state_shardings(cfg: ArchConfig, mesh: Mesh, *, fsdp: bool = True,
+                        layout: str = "tp"):
+    psds = params_sds(cfg)
+    specs = make_param_specs(psds, mesh, fsdp=fsdp, layout=layout,
+                             moe_layout=cfg.moe_impl)
+    if layout == "fsdp":
+        # ZeRO-2 moments: shard a second axis over "data" when it divides
+        # (the moments never enter fwd/bwd math, so the extra resharding
+        # cost is one cheap transpose at update time).
+        def densify(s, p):
+            t = list(s) + [None] * (len(p.shape) - len(tuple(s)))
+            if "data" not in t:
+                for i, ax in enumerate(t):
+                    if ax is None and p.shape[i] % mesh.shape["data"] == 0 \
+                            and p.shape[i] > 1:
+                        t[i] = "data"
+                        break
+            return P(*t)
+
+        specs = jax.tree.map(densify, specs, psds)
+    rep = NamedSharding(mesh, P())
+    as_shard = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree)
+    if cfg.optimizer == "adafactor":
+        vr = jax.tree.map(lambda s, p: NamedSharding(
+            mesh, _drop_axis(s, 1) if len(p.shape) >= 2 else s),
+            specs, psds)
+        vc = jax.tree.map(lambda s, p: NamedSharding(
+            mesh, P(*(tuple(s)[:-2] + tuple(s)[-1:]))
+            if len(p.shape) >= 2 and len(tuple(s)) >= 2 else P()),
+            specs, psds)
+        return AdafactorState(step=rep, vr=vr, vc=vc)
+    return AdamWState(step=rep, m=as_shard(specs), v=as_shard(specs))
+
+
+def opt_state_sds(cfg: ArchConfig):
+    psds = params_sds(cfg)
+    if cfg.optimizer == "adafactor":
+        from repro.optim import adafactor
+        return jax.eval_shape(adafactor.init, psds)
+    from repro.optim import adamw
+    return jax.eval_shape(adamw.init, psds)
+
+
+def train_state_sds(cfg: ArchConfig):
+    return TrainState(params=params_sds(cfg), opt_state=opt_state_sds(cfg),
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def train_state_shardings(cfg: ArchConfig, mesh: Mesh, *, fsdp: bool = True,
+                          layout: str = "tp"):
+    return TrainState(
+        params=param_shardings(cfg, mesh, fsdp=fsdp, layout=layout),
+        opt_state=opt_state_shardings(cfg, mesh, fsdp=fsdp, layout=layout),
+        step=NamedSharding(mesh, P()))
+
+
+def batch_sds_and_shardings(cfg: ArchConfig, mesh: Mesh, batch: int,
+                            seq_len: int,
+                            layout: str = "tp") -> Tuple[dict, dict]:
+    baxes = batch_axes(mesh, layout)
+    # Drop trailing batch axes until the global batch divides (e.g. B=256
+    # under the fsdp layout on 512 chips shards 32-way over pod x data and
+    # replicates over model).
+    while baxes:
+        dp = 1
+        for ax in baxes:
+            dp *= mesh.shape[ax]
+        if batch % dp == 0:
+            break
+        baxes = baxes[:-1]
+    bspec = NamedSharding(mesh, P(baxes))
+    b3 = NamedSharding(mesh, P(baxes, None, None))
+    sds: Dict[str, Any] = {}
+    shd: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        sds["embeds"] = jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model),
+                                             cfg.dtype)
+        sds["labels"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        shd["embeds"] = b3
+        shd["labels"] = bspec
+    elif cfg.frontend == "vision":
+        nv = cfg.n_frontend_tokens
+        sds["tokens"] = jax.ShapeDtypeStruct((batch, seq_len - nv), jnp.int32)
+        sds["labels"] = jax.ShapeDtypeStruct((batch, seq_len - nv), jnp.int32)
+        sds["vision_embeds"] = jax.ShapeDtypeStruct((batch, nv, cfg.d_model),
+                                                    cfg.dtype)
+        shd["tokens"] = bspec
+        shd["labels"] = bspec
+        shd["vision_embeds"] = b3
+    else:
+        sds["tokens"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        sds["labels"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        shd["tokens"] = bspec
+        shd["labels"] = bspec
+    return sds, shd
+
+
+def decode_specs(cfg: ArchConfig, mesh: Mesh, batch: int, seq_len: int):
+    """(params, cache, token) SDS + shardings for one decode step."""
+    baxes = batch_axes(mesh)
+    dp = 1
+    for ax in baxes:
+        dp *= mesh.shape[ax]
+    cache = cache_sds(cfg, batch, seq_len)
+    cache_shd = make_cache_shardings(cache, mesh)
+    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    tok_shd = NamedSharding(mesh, P(baxes if batch % dp == 0 else None, None))
+    return cache, cache_shd, tok, tok_shd
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mesh: Mesh, *,
+                fsdp: bool = True, layout: str = "tp"):
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell —
+    weak-type-correct, shardable, no device allocation (the dry-run
+    contract). Returns (kind, sds_args, sharding_args) where the step
+    function is lowered as jit(step, in_shardings=sharding_args)(*sds_args).
+    """
+    sh = SHAPES[shape_name]
+    if sh["step"] == "train":
+        state = train_state_sds(cfg)
+        state_shd = train_state_shardings(cfg, mesh, fsdp=fsdp,
+                                          layout=layout)
+        b_sds, b_shd = batch_sds_and_shardings(cfg, mesh, sh["batch"],
+                                               sh["seq_len"], layout=layout)
+        return "train", (state, b_sds), (state_shd, b_shd)
+    p_sds = params_sds(cfg)
+    p_shd = param_shardings(cfg, mesh, fsdp=fsdp, layout=layout)
+    c_sds, c_shd, tok_sds, tok_shd = decode_specs(cfg, mesh, sh["batch"],
+                                                  sh["seq_len"])
+    if sh["step"] == "prefill":
+        b_sds, b_shd = batch_sds_and_shardings(cfg, mesh, sh["batch"],
+                                               sh["seq_len"], layout=layout)
+        b_sds.pop("labels")
+        b_shd.pop("labels")
+        return "prefill", (p_sds, c_sds, b_sds), (p_shd, c_shd, b_shd)
+    return "decode", (p_sds, c_sds, tok_sds), (p_shd, c_shd, tok_shd)

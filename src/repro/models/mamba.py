@@ -1,0 +1,129 @@
+"""Selective SSM (Mamba) block — time-step scan formulation.
+
+The recurrence h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * u_t is run with
+``lax.scan`` over time carrying only (B, inner, N) state — never the
+(B, S, inner, N) tensor — which keeps jamba-scale prefill (inner=16384)
+inside HBM. Decode is the same step function applied once.
+
+This is the TPU adaptation choice: the original CUDA kernel fuses the scan
+in SRAM; on TPU the sequential-scan-with-small-carry form compiles to a
+tight while loop whose body is VPU element-wise work + small matmuls, and
+the d_model-sized projections around it stay MXU matmuls.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+class MambaState(NamedTuple):
+    conv: Array  # (B, K-1, inner) last conv inputs
+    h: Array     # (B, inner, N) SSM state
+
+
+def mamba_init(key: Array, cfg, dtype) -> dict:
+    d, inner = cfg.d_model, cfg.ssm_inner
+    N, K, R = cfg.ssm_state, cfg.ssm_conv, cfg.dt_rank_actual
+    keys = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * inner), dtype),
+        "conv_w": (jax.random.normal(keys[1], (K, inner), jnp.float32)
+                   * (K ** -0.5)).astype(dtype),
+        "x_proj": dense_init(keys[2], (inner, R + 2 * N), dtype),
+        "dt_proj": dense_init(keys[3], (R, inner), dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                  (inner, 1))),
+        "D": jnp.ones((inner,), jnp.float32),
+        "out_proj": dense_init(keys[4], (inner, d), dtype),
+    }
+
+
+def _ssm_scan(u: Array, dt: Array, B: Array, C: Array, A: Array, D: Array,
+              h0: Array, chunk: int = 128) -> Tuple[Array, Array]:
+    """u, dt: (Bt, S, inner); B, C: (Bt, S, N); A: (inner, N); h0: (Bt, inner, N).
+
+    Nested chunked scan: the outer scan saves one (Bt, inner, N) carry per
+    chunk; the inner per-step scan is rematerialized in the backward pass.
+    Without this, scan-bwd residuals are (S, Bt, inner, N) — terabytes at
+    jamba scale (the same problem the CUDA selective-scan kernel solves
+    with SRAM recomputation; this is the XLA-native equivalent).
+
+    Returns (y: (Bt, S, inner), h_final)."""
+    bt, S, inner = u.shape
+
+    def step(h, xs):
+        u_t, dt_t, B_t, C_t = xs           # (Bt, inner), (Bt, inner), (Bt, N)x2
+        dA = jnp.exp(dt_t[..., None] * A[None])            # (Bt, inner, N)
+        dBu = (dt_t * u_t)[..., None] * B_t[:, None, :]    # (Bt, inner, N)
+        h = dA * h + dBu
+        y = jnp.einsum("bin,bn->bi", h, C_t) + D[None] * u_t
+        return h, y
+
+    ck = min(chunk, S)
+    pad = (-S) % ck
+    nc = (S + pad) // ck
+
+    def to_chunks(x):
+        x = jnp.pad(x.transpose(1, 0, 2), ((0, pad), (0, 0), (0, 0)))
+        return x.reshape(nc, ck, *x.shape[1:])
+
+    xs = tuple(to_chunks(t) for t in (u, dt, B, C))
+
+    @jax.checkpoint
+    def chunk_step(h, xs_c):
+        return jax.lax.scan(step, h, xs_c)
+
+    h, ys = jax.lax.scan(chunk_step, h0, xs)     # ys: (nc, ck, Bt, inner)
+    ys = ys.reshape(nc * ck, bt, inner)[:S]
+    return ys.transpose(1, 0, 2), h
+
+
+def mamba_forward(params: dict, x: Array, cfg, *,
+                  state: Optional[MambaState] = None
+                  ) -> Tuple[Array, Optional[MambaState]]:
+    """x: (B, S, d). state carries (conv tail, SSM h) for decode."""
+    b, s, d = x.shape
+    inner, N = cfg.ssm_inner, cfg.ssm_state
+    K, R = cfg.ssm_conv, cfg.dt_rank_actual
+
+    xz = x @ params["in_proj"]                       # (B, S, 2*inner)
+    u, z = jnp.split(xz, 2, axis=-1)
+
+    # Depthwise causal conv over time (kernel K).
+    if state is None:
+        pad = jnp.zeros((b, K - 1, inner), u.dtype)
+        new_conv = None
+    else:
+        pad = state.conv
+        new_conv = jnp.concatenate([pad, u], axis=1)[:, -(K - 1):]
+    upad = jnp.concatenate([pad, u], axis=1)         # (B, S+K-1, inner)
+    conv_w = params["conv_w"].astype(u.dtype)        # (K, inner)
+    uc = sum(upad[:, i:i + s] * conv_w[i][None, None] for i in range(K))
+    uc = jax.nn.silu(uc)
+
+    proj = uc @ params["x_proj"]                     # (B, S, R+2N)
+    dt_r, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"]).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])                    # (inner, N)
+
+    h0 = (state.h if state is not None
+          else jnp.zeros((b, inner, N), jnp.float32))
+    y, h = _ssm_scan(uc.astype(jnp.float32), dt, Bc.astype(jnp.float32),
+                     Cc.astype(jnp.float32), A, params["D"], h0)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+
+    if state is None:
+        return y, None
+    return y, MambaState(conv=new_conv, h=h)
+
+
+def make_mamba_state(cfg, batch: int, dtype) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_inner), dtype),
+        h=jnp.zeros((batch, cfg.ssm_inner, cfg.ssm_state), jnp.float32))

@@ -1,0 +1,154 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Per head h with dim D, the wkv state S in R^{DxD} evolves as
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+with the decay w_t = exp(-exp(wbase + lora(x_t))) *data-dependent* — the
+Finch upgrade over RWKV5's static decay. Token-shift interpolation feeds
+each projection a mix of x_t and x_{t-1}.
+
+Train/prefill run a ``lax.scan`` over time carrying (B, H, D, D); decode is
+one step. The state is O(1) in sequence length — this is the arch that
+makes the 500k-token decode cell trivial.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+LORA_R = 64
+
+
+class RWKVState(NamedTuple):
+    x_tm: Array   # (B, d) previous token for time-mix shift
+    x_cm: Array   # (B, d) previous token for channel-mix shift
+    wkv: Array    # (B, H, D, D) state matrix
+
+
+def rwkv_init(key: Array, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H, D = cfg.rwkv_heads, cfg.rwkv_head_dim
+    keys = jax.random.split(key, 10)
+    return {
+        # time-mix interpolation factors per projection (r, k, v, g, w).
+        "mu": (jax.random.uniform(keys[0], (5, d), jnp.float32)).astype(dtype),
+        "wr": dense_init(keys[1], (d, d), dtype),
+        "wk": dense_init(keys[2], (d, d), dtype),
+        "wv": dense_init(keys[3], (d, d), dtype),
+        "wg": dense_init(keys[4], (d, d), dtype),
+        "wo": dense_init(keys[5], (d, d), dtype),
+        # data-dependent decay LoRA: d -> LORA_R -> d, plus base decay.
+        "w_base": jnp.zeros((d,), jnp.float32) - 6.0,
+        "w_lora_a": dense_init(keys[6], (d, LORA_R), dtype),
+        "w_lora_b": dense_init(keys[7], (LORA_R, d), dtype),
+        "u": (jax.random.normal(keys[8], (H, D), jnp.float32) * 0.1),
+        "ln_x": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def channel_mix_init(key: Array, cfg, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": jax.random.uniform(k1, (2, d), jnp.float32).astype(dtype),
+        "wk": dense_init(k2, (d, ff), dtype),
+        "wv": dense_init(k3, (ff, d), dtype),
+    }
+
+
+def _shift(x: Array, x_prev: Optional[Array]) -> Array:
+    """x: (B, S, d) -> previous-token tensor (B, S, d)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    else:
+        x_prev = x_prev[:, None, :]
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(params: dict, x: Array, cfg, *,
+                  state: Optional[RWKVState] = None
+                  ) -> Tuple[Array, Optional[Array], Optional[Array]]:
+    """Returns (out, new_x_tm, new_wkv)."""
+    b, s, d = x.shape
+    H, D = cfg.rwkv_heads, cfg.rwkv_head_dim
+
+    xs = _shift(x, state.x_tm if state is not None else None)
+    mu = params["mu"].astype(x.dtype)
+    mix = [x * mu[i][None, None] + xs * (1 - mu[i][None, None])
+           for i in range(5)]
+    r = (mix[0] @ params["wr"]).reshape(b, s, H, D)
+    k = (mix[1] @ params["wk"]).reshape(b, s, H, D)
+    v = (mix[2] @ params["wv"]).reshape(b, s, H, D)
+    g = jax.nn.silu(mix[3] @ params["wg"])
+    # Data-dependent decay (Finch): w_t in (0, 1).
+    w_raw = params["w_base"].astype(jnp.float32) + \
+        ((mix[4] @ params["w_lora_a"]) @ params["w_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_raw)).reshape(b, s, H, D)
+    u = params["u"]                                    # (H, D)
+
+    def step(S, xs_t):
+        r_t, k_t, v_t, w_t = xs_t                      # (B, H, D) each
+        kv = k_t[..., None] * v_t[..., None, :]        # (B, H, D, D)
+        y = jnp.einsum("bhd,bhde->bhe", r_t,
+                       S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    S0 = (state.wkv if state is not None
+          else jnp.zeros((b, H, D, D), jnp.float32))
+
+    # Chunked scan with inner remat: outer carries one (B, H, D, D) state
+    # per chunk; scan-bwd residuals stay O(S/chunk) instead of O(S).
+    ck = min(128, s)
+    pad = (-s) % ck
+    nc = (s + pad) // ck
+
+    def to_chunks(t):
+        t = jnp.pad(t.transpose(1, 0, 2, 3).astype(jnp.float32),
+                    ((0, pad), (0, 0), (0, 0), (0, 0)))
+        return t.reshape(nc, ck, *t.shape[1:])
+
+    seq = tuple(to_chunks(t) for t in (r, k, v, w))
+
+    @jax.checkpoint
+    def chunk_step(S, xs_c):
+        return jax.lax.scan(step, S, xs_c)
+
+    S, ys = jax.lax.scan(chunk_step, S0, seq)       # (nc, ck, B, H, D)
+    ys = ys.reshape(nc * ck, b, H, D)[:s]
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+
+    # Group norm over heads (ln_x), then gate and output-project.
+    yh = y.reshape(b, s, H, D).astype(jnp.float32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(b, s, d) * (1.0 + params["ln_x"])[None, None]).astype(x.dtype)
+    out = (y * g) @ params["wo"]
+
+    new_x_tm = x[:, -1] if state is not None else None
+    return out, new_x_tm, (S if state is not None else None)
+
+
+def rwkv_channel_mix(params: dict, x: Array, *,
+                     x_prev: Optional[Array] = None
+                     ) -> Tuple[Array, Optional[Array]]:
+    xs = _shift(x, x_prev)
+    mu = params["mu"].astype(x.dtype)
+    xk = x * mu[0][None, None] + xs * (1 - mu[0][None, None])
+    h = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    out = h @ params["wv"]
+    return out, (x[:, -1] if x_prev is not None else None)
+
+
+def make_rwkv_state(cfg, batch: int, dtype) -> RWKVState:
+    return RWKVState(
+        x_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        x_cm=jnp.zeros((batch, cfg.d_model), dtype),
+        wkv=jnp.zeros((batch, cfg.rwkv_heads, cfg.rwkv_head_dim,
+                       cfg.rwkv_head_dim), jnp.float32))

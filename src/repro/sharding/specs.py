@@ -1,0 +1,317 @@
+"""Logical-axis sharding rules -> PartitionSpec, with divisibility fallback.
+
+Axis mapping (production mesh: ("pod",) "data", "model"):
+
+  vocab / heads / ff / experts / inner  -> "model"   (tensor/expert parallel)
+  dmodel                                -> "data" when FSDP is on (ZeRO-3
+                                           weight sharding; all-gather at use)
+  batch                                 -> ("pod", "data")
+
+Any logical axis whose size does not divide its mesh axis falls back to
+replicated (e.g. internvl2's 92553 vocab on a 16-way model axis) — the rule
+engine checks divisibility per leaf, so odd published shapes never break
+lowering. Stacked scan-over-period params (leading R axis) get a leading
+None automatically.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Rules keyed by (parent, leaf) or leaf name: logical axes for the LAST
+# len(rule) dims of the param. None = replicated dim.
+_RULES = {
+    ("", "embed"): ("vocab", "dmodel"),
+    ("", "unembed"): ("dmodel", "vocab"),
+    ("attn", "wq"): ("dmodel", "heads"),
+    ("attn", "wk"): ("dmodel", "heads"),
+    ("attn", "wv"): ("dmodel", "heads"),
+    ("attn", "wo"): ("heads", "dmodel"),
+    ("mlp", "w1"): ("dmodel", "ff"),
+    ("mlp", "w3"): ("dmodel", "ff"),
+    ("mlp", "w2"): ("ff", "dmodel"),
+    ("dense_res", "w1"): ("dmodel", "ff"),
+    ("dense_res", "w3"): ("dmodel", "ff"),
+    ("dense_res", "w2"): ("ff", "dmodel"),
+    ("moe", "router"): (None, None),
+    ("moe", "w1"): ("experts", "dmodel", "ff"),
+    ("moe", "w3"): ("experts", "dmodel", "ff"),
+    ("moe", "w2"): ("experts", "ff", "dmodel"),
+    ("mamba", "in_proj"): ("dmodel", "inner"),
+    ("mamba", "conv_w"): (None, "inner"),
+    ("mamba", "x_proj"): ("inner", None),
+    ("mamba", "dt_proj"): (None, "inner"),
+    ("mamba", "A_log"): ("inner", None),
+    ("mamba", "D"): ("inner",),
+    ("mamba", "out_proj"): ("inner", "dmodel"),
+    ("rwkv", "wr"): ("dmodel", "heads"),
+    ("rwkv", "wk"): ("dmodel", "heads"),
+    ("rwkv", "wv"): ("dmodel", "heads"),
+    ("rwkv", "wg"): ("dmodel", "heads"),
+    ("rwkv", "wo"): ("heads", "dmodel"),
+    ("cmix", "wk"): ("dmodel", "ff"),
+    ("cmix", "wv"): ("ff", "dmodel"),
+}
+
+
+def _logical_to_mesh(logical: Optional[str], fsdp: bool,
+                     layout: str = "tp") -> Optional[str]:
+    if logical is None:
+        return None
+    if layout == "fsdp":
+        # Pure data-parallel layout: no tensor parallelism; weights are
+        # ZeRO-3 sharded over the "model" axis (gathered at use) and the
+        # batch spans BOTH mesh axes. The right choice for models whose
+        # optimizer state fits a 16-way shard (<= ~30B dense) — trades the
+        # per-layer activation all-reduces (which scale with per-device
+        # tokens) for weight all-gathers (which scale with params/pass).
+        return "model" if logical == "dmodel" else None
+    if logical == "dmodel":
+        return "data" if fsdp else None
+    return "model"
+
+
+def _moe_experts_divisible(shape, mesh: Mesh) -> bool:
+    return shape[-3] % mesh.shape["model"] == 0
+
+
+def spec_for_param(path, shape, mesh: Mesh, *, fsdp: bool,
+                   layout: str = "tp", moe_layout: str = "psum") -> P:
+    """PartitionSpec for one param leaf given its tree path."""
+    names = [k.key for k in path if isinstance(k, jax.tree_util.DictKey)]
+    leaf = names[-1] if names else ""
+    parent = ""
+    for n in reversed(names[:-1]):
+        if n in ("attn", "mlp", "moe", "mamba", "rwkv", "cmix", "dense_res"):
+            parent = n
+            break
+    rule = _RULES.get((parent, leaf)) or _RULES.get(("", leaf))
+    if rule is None:
+        return P()  # norms, scalars, biases: replicated
+
+    rule = list(rule)
+    # MoE: experts over "model" when divisible (EP; ff replicated within a
+    # shard), else expert-TP on the ff dim. moe_layout="a2a": experts over
+    # the data axes + ff-TP over "model" (weights fully sharded, no ZeRO
+    # gathers — tokens move instead; see models/moe._moe_forward_a2a).
+    if parent == "moe" and leaf in ("w1", "w2", "w3"):
+        if moe_layout == "a2a":
+            baxes = batch_axes(mesh)
+            dp = 1
+            for ax in baxes:
+                dp *= mesh.shape[ax]
+            E = shape[-3]
+            ff = shape[-1] if leaf in ("w1", "w3") else shape[-2]
+            if E % dp == 0 and ff % mesh.shape["model"] == 0:
+                ndim = len(shape)
+                axes = [None] * ndim
+                axes[ndim - 3] = baxes
+                if leaf in ("w1", "w3"):
+                    axes[ndim - 1] = "model"
+                else:
+                    axes[ndim - 2] = "model"
+                return P(*axes)
+        if _moe_experts_divisible(shape, mesh):
+            rule = (["experts", "dmodel", None] if leaf in ("w1", "w3")
+                    else ["experts", None, "dmodel"])
+        else:
+            rule = ([None, "dmodel", "ff"] if leaf in ("w1", "w3")
+                    else [None, "ff", "dmodel"])
+    if layout == "fsdp":
+        # ZeRO-3 wants the LARGEST axis sharded; prefer the non-dmodel
+        # axis when it divides (ff/vocab/heads are the big dims).
+        big = ["dmodel" if r is not None else None for r in rule]
+        rule = big
+
+    ndim = len(shape)
+    axes: list = [None] * ndim
+    offset = ndim - len(rule)   # leading stacked axes (scan segments)
+    for i, logical in enumerate(rule):
+        ax = _logical_to_mesh(logical, fsdp, layout)
+        if ax is not None and shape[offset + i] % mesh.shape[ax] == 0:
+            axes[offset + i] = ax
+            if layout == "fsdp":
+                break  # one sharded dim is enough for ZeRO-3
+    return P(*axes)
+
+
+def make_param_specs(params_shapes, mesh: Mesh, *, fsdp: bool = True,
+                     layout: str = "tp", moe_layout: str = "psum"):
+    """Map a pytree of ShapeDtypeStructs/arrays -> pytree of PartitionSpec."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_param(path, leaf.shape, mesh, fsdp=fsdp,
+                                          layout=layout,
+                                          moe_layout=moe_layout),
+        params_shapes)
+
+
+def make_param_shardings(params_shapes, mesh: Mesh, *, fsdp: bool = True,
+                         layout: str = "tp"):
+    specs = make_param_specs(params_shapes, mesh, fsdp=fsdp, layout=layout)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def batch_axes(mesh: Mesh, layout: str = "tp") -> Tuple[str, ...]:
+    if layout == "fsdp":
+        return tuple(ax for ax in ("pod", "data", "model")
+                     if ax in mesh.axis_names)
+    return tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+
+
+def make_constrain(mesh: Mesh, *, fsdp: bool = False, layout: str = "tp"):
+    """Activation sharding-constraint function passed into the model.
+
+    Carries a ``shard_ctx`` attribute (mesh, data axes, fsdp flag) so
+    layers that run explicit shard_map regions (MoE dispatch) can build
+    matching in/out specs. layout="fsdp" = no tensor parallelism: batch
+    spans every axis and attention/MoE internals stay batch-sharded.
+    """
+    baxes = batch_axes(mesh, layout)
+    model_size = 1 if layout == "fsdp" else mesh.shape["model"]
+
+    dp_size = 1
+    for ax in baxes:
+        dp_size *= mesh.shape[ax]
+
+    def _b(dim):
+        """Largest batch-axis prefix whose product divides ``dim``
+        (decode B=1 replicates; B=256 on 512 chips shards 32-way)."""
+        axes = baxes
+        while axes:
+            dp = 1
+            for ax in axes:
+                dp *= mesh.shape[ax]
+            if dim % dp == 0 and dim > 1:
+                return axes
+            axes = axes[:-1]
+        return None
+
+    def constrain(x, kind: str):
+        if kind == "activations":
+            spec = P(_b(x.shape[0]), *([None] * (x.ndim - 1)))
+        elif kind == "logits":
+            vshard = ("model" if layout != "fsdp"
+                      and x.shape[-1] % model_size == 0 else None)
+            spec = P(_b(x.shape[0]), *([None] * (x.ndim - 2)), vshard)
+        elif kind == "attn_q5":
+            # Stacked query chunks (nc, B, qc, H, Dh). Head-parallel when
+            # heads divide the model axis (zero-comm scores); else
+            # query-chunk sequence sharding with replicated k/v.
+            _, b, qc, h, _ = x.shape
+            if layout == "fsdp":
+                spec = P(None, _b(b), None, None, None)
+            elif h % model_size == 0:
+                spec = P(None, _b(b), None, "model", None)
+            elif qc % model_size == 0:
+                spec = P(None, _b(b), "model", None, None)
+            else:
+                spec = P(None, _b(b), None, None, None)
+        elif kind == "attn_kv":
+            # x: (B, T, H, Dh): head-sharded when divisible, else
+            # replicated inside the layer (scores stay device-local).
+            b, _, h, _ = x.shape
+            if layout != "fsdp" and h % model_size == 0:
+                spec = P(_b(b), None, "model", None)
+            else:
+                spec = P(_b(b), None, None, None)
+        elif kind == "moe_tokens":
+            # flattened (T, d)
+            spec = P(_b(x.shape[0]), None)
+        elif kind == "moe_dispatch":
+            # (E, C, d): experts over "model" (EP), capacity over data.
+            e, c, _ = x.shape
+            espec = "model" if e % model_size == 0 else None
+            cspec = baxes if c % dp_size == 0 else None
+            if espec is None and c % (dp_size * model_size) == 0:
+                cspec = baxes + ("model",)
+            spec = P(espec, cspec, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    if layout == "tp":
+        constrain.shard_ctx = {"mesh": mesh, "data_axes": baxes,
+                               "fsdp": fsdp}
+    return constrain
+
+
+def cache_spec_for_leaf(path, shape, mesh: Mesh) -> P:
+    """KV caches / SSM states: batch over the data axes, plus a second
+    sharded dim so no single state replicates at long context:
+
+      KV k/v (B, S, Hkv, Dh):  B -> data axes, S -> "model"
+                               (B==1: S -> data axes + "model" combined —
+                               the 500k-decode flash-decoding layout; the
+                               softmax stats all-reduce is tiny)
+      Mamba conv (B, K-1, inner) / h (B, inner, N): inner -> "model"
+      RWKV wkv (B, H, D, D): H -> "model"; shifts (B, d): d -> "model"
+
+    Leaves may carry a leading stacked-segment axis (scan over periods).
+    """
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+    leaf = names[-1] if names else ""
+    if leaf == "pos":
+        return P()
+    baxes = batch_axes(mesh)
+    dp = 1
+    for ax in baxes:
+        dp *= mesh.shape[ax]
+    model = mesh.shape["model"]
+
+    ndim = len(shape)
+    # nominal rank per leaf kind
+    rank = {"k": 4, "v": 4, "conv": 3, "h": 3, "wkv": 4,
+            "x_tm": 2, "x_cm": 2}.get(leaf, ndim)
+    off = ndim - rank
+    axes: list = [None] * ndim
+    bdim = off  # batch dim position
+    b_ok = shape[bdim] % dp == 0 and shape[bdim] > 1
+
+    if leaf in ("k", "v"):
+        s_dim, h_dim = off + 1, off + 2
+        if b_ok:
+            axes[bdim] = baxes
+            if shape[s_dim] % model == 0:
+                axes[s_dim] = "model"
+        else:
+            combined = baxes + ("model",)
+            if shape[s_dim] % (dp * model) == 0:
+                axes[s_dim] = combined
+            elif shape[s_dim] % model == 0:
+                axes[s_dim] = "model"
+    elif leaf == "conv":
+        if b_ok:
+            axes[bdim] = baxes
+        if shape[off + 2] % model == 0:
+            axes[off + 2] = "model"
+    elif leaf == "h":
+        if b_ok:
+            axes[bdim] = baxes
+        if shape[off + 1] % model == 0:
+            axes[off + 1] = "model"
+    elif leaf == "wkv":
+        if b_ok:
+            axes[bdim] = baxes
+        if shape[off + 1] % model == 0:
+            axes[off + 1] = "model"
+    elif leaf in ("x_tm", "x_cm"):
+        if b_ok:
+            axes[bdim] = baxes
+        if shape[off + 1] % model == 0:
+            axes[off + 1] = "model"
+    return P(*axes)
+
+
+def make_cache_shardings(cache_shapes, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec_for_leaf(path, leaf.shape, mesh)),
+        cache_shapes)

@@ -1,0 +1,66 @@
+"""Serving steps: prefill (fill KV/SSM caches) and decode (one token).
+
+Decode donates the cache so XLA updates buffers in place — at 500k-token
+contexts the cache IS the memory footprint and a copy would double it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import forward, init_cache
+
+Array = jax.Array
+
+
+def make_prefill(cfg: ArchConfig, *, constrain=lambda x, k: x,
+                 q_chunk: int = 2048) -> Callable:
+    def prefill(params, cache, batch: dict):
+        kwargs = {}
+        if "embeds" in batch:
+            kwargs["embeds"] = batch["embeds"]
+        else:
+            kwargs["tokens"] = batch["tokens"]
+        if "vision_embeds" in batch:
+            kwargs["vision_embeds"] = batch["vision_embeds"]
+        logits, cache, _ = forward(params, cfg, cache=cache,
+                                   constrain=constrain, q_chunk=q_chunk,
+                                   **kwargs)
+        return logits[:, -1:], cache
+
+    return prefill
+
+
+def make_decode(cfg: ArchConfig, *, constrain=lambda x, k: x) -> Callable:
+    def decode(params, cache, token: Array):
+        logits, cache, _ = forward(params, cfg, tokens=token, cache=cache,
+                                   constrain=constrain)
+        return logits, cache
+
+    return decode
+
+
+def greedy_generate(cfg: ArchConfig, params, prompt: Array, n_new: int,
+                    cache_len: Optional[int] = None) -> Array:
+    """Reference autoregressive loop (examples / tests)."""
+    b, s = prompt.shape
+    cache_len = cache_len or (s + n_new)
+    cache = init_cache(cfg, b, cache_len, dtype=cfg.dtype)
+    prefill = make_prefill(cfg)
+    decode = make_decode(cfg)
+    logits, cache = prefill(params, cache, {"tokens": prompt})
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+
+    def body(carry, _):
+        cache, tok = carry
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return (cache, tok), tok
+
+    (_, _), toks = jax.lax.scan(body, (cache, tok), None, length=n_new - 1)
+    rest = toks[:, :, 0].T  # (n_new-1, b, 1) -> (b, n_new-1)
+    return jnp.concatenate([tok, rest], axis=1)

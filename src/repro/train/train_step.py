@@ -1,0 +1,194 @@
+"""Training step: loss, (accumulated) grads, clipping, optimizer update.
+
+Built as a closure over the static ArchConfig so the whole step jits to one
+XLA program. Microbatching (gradient accumulation) runs as a lax.scan over
+microbatch slices — activations for only one microbatch are ever live.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import forward
+from repro.optim import adafactor, adamw
+from repro.optim.schedules import warmup_cosine
+
+Array = jax.Array
+
+AUX_LOSS_WEIGHT = 0.01
+IGNORE_LABEL = -1
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean next-token CE over labels != IGNORE_LABEL (fp32 math)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    safe = jnp.maximum(labels, 0)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    mask = (labels != IGNORE_LABEL).astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def fused_unembed_ce(hidden: Array, unembed: Array, labels: Array, *,
+                     vocab_size: int, chunk: int = 16384) -> Array:
+    """CE fused into the unembedding matmul, scanned over vocab chunks.
+
+    The full (tokens, V) logits tensor never exists — each chunk computes
+    hidden @ W[:, v:v+chunk], folds it into an online logsumexp (carry =
+    running max + scaled sum + label logit), and is discarded. Backward
+    recomputes each chunk's logits (one extra unembed-matmul of FLOPs) —
+    the standard memory/compute trade for 256k-vocab models on an
+    unsharded-vocab (pure-FSDP) layout.
+    """
+    b, s, d = hidden.shape
+    V = unembed.shape[-1]
+    # chunk count must divide V exactly (no padded copies of the matrix)
+    nc = max(1, (V + chunk - 1) // chunk)
+    while V % nc:
+        nc += 1
+    chunk = V // nc
+    w_chunks = unembed.reshape(d, nc, chunk).transpose(1, 0, 2)
+
+    safe = jnp.maximum(labels, 0)
+    mask = (labels != IGNORE_LABEL).astype(jnp.float32)
+
+    def body(carry, xs):
+        m, ssum, lab = carry
+        ci, w = xs
+        lg = (hidden @ w).astype(jnp.float32)            # (B, S, chunk)
+        col0 = ci * chunk
+        cols = col0 + jnp.arange(chunk)
+        lg = jnp.where(cols[None, None, :] < vocab_size, lg, -1e30)
+        m_new = jnp.maximum(m, lg.max(axis=-1))
+        ssum = ssum * jnp.exp(m - m_new) + jnp.exp(
+            lg - m_new[..., None]).sum(-1)
+        # label logit if the label falls inside this chunk
+        in_chunk = (safe >= col0) & (safe < col0 + chunk)
+        idx = jnp.clip(safe - col0, 0, chunk - 1)
+        lab_here = jnp.take_along_axis(lg, idx[..., None], axis=-1)[..., 0]
+        lab = jnp.where(in_chunk, lab_here, lab)
+        return (m_new, ssum, lab), None
+
+    init = (jnp.full((b, s), -jnp.inf, jnp.float32),
+            jnp.zeros((b, s), jnp.float32),
+            jnp.zeros((b, s), jnp.float32))
+    (m, ssum, lab), _ = jax.lax.scan(body, init,
+                                     (jnp.arange(nc), w_chunks))
+    lse = m + jnp.log(ssum)
+    ll = lab - lse
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+FUSED_CE_MIN_VOCAB = 65536
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, constrain) -> Tuple[Array, dict]:
+    kwargs = {}
+    if "embeds" in batch:
+        kwargs["embeds"] = batch["embeds"]
+    else:
+        kwargs["tokens"] = batch["tokens"]
+    if "vision_embeds" in batch:
+        kwargs["vision_embeds"] = batch["vision_embeds"]
+    labels = batch["labels"]
+    fused = cfg.padded_vocab >= FUSED_CE_MIN_VOCAB
+    if fused:
+        hidden, _, aux = forward(params, cfg, constrain=constrain,
+                                 return_hidden=True, **kwargs)
+        if "vision_embeds" in batch:
+            hidden = hidden[:, batch["vision_embeds"].shape[1]:]
+        ce = fused_unembed_ce(hidden, params["unembed"], labels,
+                              vocab_size=cfg.vocab_size)
+    else:
+        logits, _, aux = forward(params, cfg, constrain=constrain, **kwargs)
+        if "vision_embeds" in batch:
+            logits = logits[:, batch["vision_embeds"].shape[1]:]
+        ce = cross_entropy(logits, labels)
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def global_norm(tree) -> Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt_state: tuple
+    step: Array
+
+
+def init_train_state(cfg: ArchConfig, params) -> TrainState:
+    opt = adafactor if cfg.optimizer == "adafactor" else adamw
+    return TrainState(params=params, opt_state=opt.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ArchConfig, *, constrain=lambda x, k: x,
+                    peak_lr: float = 3e-4, warmup_steps: int = 100,
+                    total_steps: int = 10_000, grad_clip: float = 1.0,
+                    microbatches: int = 1,
+                    accum_dtype=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    accum_dtype: gradient-accumulation dtype across microbatches. Defaults
+    to fp32 below 100B params; bf16 above — at arctic/jamba scale two
+    params-shaped fp32 buffers alone exceed a v5e's HBM (477e9 x 4 B / 256
+    chips = 7.5 GB each; the while-loop carry double-buffers it).
+    """
+    opt = adafactor if cfg.optimizer == "adafactor" else adamw
+    if accum_dtype is None:
+        accum_dtype = (jnp.bfloat16 if cfg.param_count() >= 1e11
+                       else jnp.float32)
+
+    def grads_of(params, batch):
+        (loss, extras), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch, constrain)
+        return loss, extras, grads
+
+    def train_step(state: TrainState, batch: dict):
+        if microbatches > 1:
+            def slice_mb(x):
+                b = x.shape[0] // microbatches
+                return x.reshape(microbatches, b, *x.shape[1:])
+
+            mbatch = jax.tree.map(slice_mb, batch)
+
+            def acc_body(carry, mb):
+                loss_a, grads_a = carry
+                loss, _extras, grads = grads_of(state.params, mb)
+                return (loss_a + loss,
+                        jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                     grads_a, grads)), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), state.params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros(()), zero), mbatch)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            extras = {"ce": loss, "aux": jnp.zeros(())}
+        else:
+            loss, extras, grads = grads_of(state.params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = warmup_cosine(state.step, peak_lr=peak_lr,
+                           warmup_steps=warmup_steps,
+                           total_steps=total_steps)
+        new_params, new_opt = opt.update(grads, state.opt_state,
+                                         state.params, lr=lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **extras}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,141 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on
+CPU, asserting output shapes and finiteness; decode-vs-full consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data.synthetic import SyntheticPipeline
+from repro.models.transformer import forward, init_cache, init_params
+from repro.train.train_step import init_train_state, make_train_step
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _inputs(cfg, key, B, S):
+    kwargs = {}
+    if cfg.frontend == "audio":
+        kwargs["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                             jnp.float32)
+    else:
+        nv = cfg.n_frontend_tokens
+        kwargs["tokens"] = jax.random.randint(key, (B, S - nv), 0,
+                                              cfg.vocab_size)
+        if cfg.frontend == "vision":
+            kwargs["vision_embeds"] = jax.random.normal(
+                key, (B, nv, cfg.d_model), jnp.float32)
+    return kwargs
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = ARCHS[arch].reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S = 2, 16
+    logits, _, aux = forward(params, cfg, **_inputs(cfg, key, B, S))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = ARCHS[arch].reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = init_train_state(cfg, params)
+    step = jax.jit(make_train_step(cfg, peak_lr=1e-3, warmup_steps=2,
+                                   total_steps=10))
+    pipe = SyntheticPipeline(cfg, batch=2, seq_len=16, seed=0)
+    state, metrics = step(state, pipe.next_batch())
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state.step) == 1
+    # lr is 0 at warmup step 0 — take a second step before checking that
+    # params moved
+    state, metrics = step(state, pipe.next_batch())
+    before = jax.tree.leaves(params)[0]
+    after = jax.tree.leaves(state.params)[0]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    cfg = ARCHS[arch].reduced()
+    if cfg.n_experts:
+        # avoid capacity-drop nondeterminism between batch shapes
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.n_experts))
+    key = jax.random.PRNGKey(42)
+    params = init_params(cfg, key)
+    B, S = 2, 20
+    if cfg.frontend == "audio":
+        embeds = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+        full, _, _ = forward(params, cfg, embeds=embeds)
+        cache = init_cache(cfg, B, S, dtype=jnp.float32)
+        _, cache, _ = forward(params, cfg, embeds=embeds[:, :S - 1],
+                              cache=cache)
+        last, _, _ = forward(params, cfg, embeds=embeds[:, S - 1:S],
+                             cache=cache)
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        kwargs = {}
+        if cfg.frontend == "vision":
+            kwargs["vision_embeds"] = jax.random.normal(
+                key, (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+        full, _, _ = forward(params, cfg, tokens=toks, **kwargs)
+        cache = init_cache(cfg, B, S + cfg.n_frontend_tokens,
+                           dtype=jnp.float32)
+        _, cache, _ = forward(params, cfg, tokens=toks[:, :S - 1],
+                              cache=cache, **kwargs)
+        last, _, _ = forward(params, cfg, tokens=toks[:, S - 1:S],
+                             cache=cache)
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, -1]), atol=5e-4, rtol=1e-3)
+
+
+def test_sliding_window_masks_history():
+    """SWA with window w must ignore tokens beyond w."""
+    cfg = dataclasses.replace(ARCHS["mixtral-8x22b"].reduced(), window=4,
+                              n_experts=0,
+                              layer_pattern=ARCHS["mixtral-8x22b"]
+                              .reduced().layer_pattern)
+    # make it dense (no experts) for simplicity
+    from repro.configs.base import LayerSpec
+    cfg = dataclasses.replace(cfg, layer_pattern=(LayerSpec("swa"),),
+                              n_layers=2)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (1, 12), 0, cfg.vocab_size)
+    logits1, _, _ = forward(params, cfg, tokens=toks)
+    # perturb a token far outside the window of the last position
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    logits2, _, _ = forward(params, cfg, tokens=toks2)
+    np.testing.assert_allclose(np.asarray(logits1[0, -1]),
+                               np.asarray(logits2[0, -1]), atol=1e-5)
+    # but a token inside the window does change the output
+    toks3 = toks.at[0, 10].set((toks[0, 10] + 1) % cfg.vocab_size)
+    logits3, _, _ = forward(params, cfg, tokens=toks3)
+    assert not np.allclose(np.asarray(logits1[0, -1]),
+                           np.asarray(logits3[0, -1]), atol=1e-5)
+
+
+def test_param_counts_match_published_sizes():
+    expected = {
+        "llama3.2-3b": (3.0e9, 4.2e9),
+        "minitron-8b": (7.2e9, 8.6e9),
+        "gemma3-27b": (26e9, 30e9),
+        "deepseek-coder-33b": (31e9, 35e9),
+        "musicgen-large": (1.9e9, 3.3e9),
+        "arctic-480b": (450e9, 500e9),
+        "mixtral-8x22b": (135e9, 145e9),
+        "jamba-1.5-large-398b": (380e9, 410e9),
+        "rwkv6-7b": (6.5e9, 7.9e9),
+        "internvl2-26b": (18e9, 22e9),   # LLM backbone (ViT is stubbed)
+    }
+    for arch, (lo, hi) in expected.items():
+        n = ARCHS[arch].param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B outside [{lo}, {hi}]"

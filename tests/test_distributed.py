@@ -1,0 +1,188 @@
+"""Distribution tests that need >1 host device run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count (jax locks the device
+count at first import, and the main pytest process must stay 1-device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 4) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = REPO_SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_distributed_smo_matches_single_device():
+    res = _run("""
+        import json
+        import jax, jax.numpy as jnp
+        from repro.core import SlabSpec, rbf, solve_blocked, dual_objective
+        from repro.core.distributed_smo import solve_blocked_distributed
+        from repro.data import make_toy
+        X, _ = make_toy(jax.random.PRNGKey(1), 256)
+        spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
+        K = spec.kernel.gram(X.astype(jnp.float32))
+        mesh = jax.make_mesh((4,), ("data",))
+        rd = solve_blocked_distributed(X, spec, mesh, data_axes=("data",),
+                                       P_pairs=8, tol=1e-4)
+        rs = solve_blocked(X, spec, P=8, tol=1e-4)
+        print(json.dumps({
+            "obj_dist": float(dual_objective(rd.model.gamma, K)),
+            "obj_single": float(dual_objective(rs.model.gamma, K)),
+            "sum_dist": float(rd.model.gamma.sum()),
+            "expected_sum": spec.total(),
+            "converged": bool(rd.converged),
+        }))
+    """)
+    assert res["converged"]
+    assert abs(res["sum_dist"] - res["expected_sum"]) < 1e-4
+    assert res["obj_dist"] == pytest.approx(res["obj_single"], abs=2e-3)
+
+
+def test_distributed_smo_multi_axis_pod_mesh():
+    res = _run("""
+        import json
+        import jax, jax.numpy as jnp
+        from repro.core import SlabSpec, rbf, dual_objective, solve_qp
+        from repro.core.distributed_smo import solve_blocked_distributed
+        from repro.data import make_toy
+        X, _ = make_toy(jax.random.PRNGKey(2), 240)   # pad test: 240 % 8 = 0
+        spec = SlabSpec(nu1=0.4, nu2=0.1, eps=0.5, kernel=rbf(gamma=0.8))
+        K = spec.kernel.gram(X.astype(jnp.float32))
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
+        rd = solve_blocked_distributed(X, spec, mesh,
+                                       data_axes=("pod", "data"),
+                                       P_pairs=4, tol=1e-4)
+        qp = solve_qp(X, spec, max_iters=50000, tol=1e-10)
+        print(json.dumps({
+            "obj_dist": float(dual_objective(rd.model.gamma, K)),
+            "obj_qp": float(qp.objective),
+            "converged": bool(rd.converged),
+        }))
+    """, devices=8)
+    assert res["converged"]
+    assert res["obj_dist"] == pytest.approx(res["obj_qp"], abs=3e-3)
+
+
+def test_sharded_train_step_matches_single_device():
+    """pjit train step on a (2,2) mesh == unsharded result."""
+    res = _run("""
+        import json
+        import jax, jax.numpy as jnp
+        from repro.configs import ARCHS
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.specs import (batch_sds_and_shardings,
+                                        train_state_shardings)
+        from repro.sharding.specs import make_constrain
+        from repro.models.transformer import init_params
+        from repro.train.train_step import make_train_step, init_train_state
+        from repro.data.synthetic import SyntheticPipeline
+
+        cfg = ARCHS["minitron-8b"].reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        pipe = SyntheticPipeline(cfg, batch=4, seq_len=16, seed=0)
+        batch = pipe.next_batch()
+
+        # single-device reference
+        s0 = init_train_state(cfg, params)
+        step0 = jax.jit(make_train_step(cfg, peak_lr=1e-3, warmup_steps=2,
+                                        total_steps=10))
+        s0, m0 = step0(s0, batch)
+
+        mesh = make_test_mesh((2, 2), ("data", "model"))
+        constrain = make_constrain(mesh, fsdp=True)
+        shd = train_state_shardings(cfg, mesh, fsdp=True)
+        _, bshd = batch_sds_and_shardings(cfg, mesh, 4, 16)
+        with mesh:
+            step1 = jax.jit(make_train_step(cfg, peak_lr=1e-3,
+                                            warmup_steps=2, total_steps=10,
+                                            constrain=constrain),
+                            in_shardings=(shd, bshd),
+                            out_shardings=(shd, None))
+            s1 = jax.device_put(init_train_state(cfg, params), shd)
+            batch1 = {k: jax.device_put(v, bshd[k]) for k, v in batch.items()}
+            s1, m1 = step1(s1, batch1)
+        diff = max(float(jnp.abs(a - b).max()) for a, b in
+                   zip(jax.tree.leaves(s0.params), jax.tree.leaves(s1.params)))
+        print(json.dumps({"loss0": float(m0["loss"]),
+                          "loss1": float(m1["loss"]),
+                          "max_param_diff": diff}))
+    """)
+    assert res["loss0"] == pytest.approx(res["loss1"], abs=2e-3)
+    assert res["max_param_diff"] < 5e-2
+
+
+def test_moe_shard_map_matches_global_path():
+    """The shard_map MoE (production) == the dense global path."""
+    res = _run("""
+        import json, dataclasses
+        import jax, jax.numpy as jnp
+        from repro.configs import ARCHS
+        from repro.launch.mesh import make_test_mesh
+        from repro.sharding.specs import make_constrain
+        from repro.models.moe import moe_forward, moe_init
+
+        d, E = 16, 4
+        key = jax.random.PRNGKey(0)
+        p = moe_init(key, d, E, 32, "swiglu", jnp.float32)
+        x = jax.random.normal(key, (4, 8, d), jnp.float32)
+        # global path (no ctx)
+        y0, aux0 = moe_forward(p, x, n_experts=E, top_k=2,
+                               capacity_factor=float(E), mlp_type="swiglu")
+        mesh = make_test_mesh((2, 2), ("data", "model"))
+        constrain = make_constrain(mesh, fsdp=False)
+        with mesh:
+            y1, aux1 = jax.jit(lambda p, x: moe_forward(
+                p, x, n_experts=E, top_k=2, capacity_factor=float(E),
+                mlp_type="swiglu", constrain=constrain))(p, x)
+        print(json.dumps({
+            "max_diff": float(jnp.abs(y0 - y1).max()),
+            "aux0": float(aux0), "aux1": float(aux1)}))
+    """)
+    assert res["max_diff"] < 5e-4
+    # aux is computed per data shard then averaged (GShard computes the
+    # balance loss per group) — close to, but not identical with, the
+    # global-batch statistic.
+    assert res["aux0"] == pytest.approx(res["aux1"], rel=0.25, abs=0.05)
+
+
+def test_compressed_gradient_allreduce():
+    res = _run("""
+        import json
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.optim.compression import init_error_state, psum_compressed
+        mesh = jax.make_mesh((4,), ("data",))
+        g = {"w": jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 7.0}
+        err = init_error_state(g)
+
+        def f(g, err):
+            return psum_compressed(g, err, ("data",))
+
+        out, new_err = jax.shard_map(
+            f, mesh=mesh, in_specs=(P("data", None), P("data", None)),
+            out_specs=(P("data", None), P("data", None)),
+            check_vma=False)(g, err)
+        # mean over the data axis of identical shards == original/1? no:
+        # shards differ; compare against the true mean of shards
+        true_mean = g["w"].reshape(4, 1, 8).mean(axis=0)
+        # each shard holds the mean of the 4 device-local rows
+        errmax = float(jnp.abs(out["w"] - jnp.tile(true_mean, (4, 1))).max())
+        rel = errmax / float(jnp.abs(true_mean).max())
+        print(json.dumps({"rel_err": rel}))
+    """)
+    # single-shot int8 quantization error; the error-feedback residual
+    # cancels it across steps (test_substrate asserts the cumulative
+    # stream is lossless to <10%)
+    assert res["rel_err"] < 0.3

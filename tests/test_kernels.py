@@ -1,0 +1,90 @@
+"""Pallas kernel tests: shape/dtype sweeps, assert_allclose vs ref.py
+oracles, interpret=True (CPU) execution of the same BlockSpec tiling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import linear, poly, rbf
+from repro.kernels import decision, fupdate, gram
+from repro.kernels.decision.ref import decision_ref
+from repro.kernels.fupdate.ref import fupdate_ref
+from repro.kernels.gram.ref import gram_ref
+
+KERNELS = [linear(), rbf(gamma=0.35), poly(gamma=0.2, coef0=1.0, degree=2)]
+SHAPES = [(16, 8, 3), (100, 50, 7), (256, 256, 64), (300, 130, 129),
+          (512, 600, 40)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_gram_matches_ref(kern, shape, dtype):
+    m, n, d = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    X = jax.random.normal(k1, (m, d), dtype)
+    Y = jax.random.normal(k2, (n, d), dtype)
+    out = gram(X, Y, kern, interpret=True)
+    ref = gram_ref(X, Y, kind=kern.name, gamma=kern.gamma,
+                   coef0=kern.coef0, degree=kern.degree)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("m,d,s", [(64, 16, 2), (200, 33, 5), (512, 128, 16),
+                                   (700, 64, 2)])
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_fupdate_matches_ref(kern, m, d, s, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    X = jax.random.normal(keys[0], (m, d), dtype)
+    Xs = X[:s]
+    delta = jax.random.normal(keys[1], (s,), jnp.float32) * 0.1
+    f = jax.random.normal(keys[2], (m,), jnp.float32)
+    out = fupdate(X, Xs, delta, f, kern, interpret=True)
+    ref = fupdate_ref(X, Xs, delta[:, None], f[:, None], kind=kern.name,
+                      gamma=kern.gamma, coef0=kern.coef0,
+                      degree=kern.degree)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("nq,m,d", [(32, 64, 8), (150, 333, 20),
+                                    (256, 512, 128)])
+def test_decision_matches_ref(kern, nq, m, d):
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    Q = jax.random.normal(keys[0], (nq, d), jnp.float32)
+    T = jax.random.normal(keys[1], (m, d), jnp.float32)
+    gv = jax.random.normal(keys[2], (m,), jnp.float32) * 0.05
+    out = decision(Q, T, gv, 0.2, 0.8, kern, interpret=True)
+    ref = decision_ref(Q, T, gv[:, None], 0.2, 0.8, kind=kern.name,
+                       gamma=kern.gamma, coef0=kern.coef0,
+                       degree=kern.degree)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gram_tiling_variants():
+    """Different BlockSpec tile sizes give identical results."""
+    kern = rbf(gamma=0.5)
+    X = jax.random.normal(jax.random.PRNGKey(3), (300, 70), jnp.float32)
+    ref = gram_ref(X, X, kind="rbf", gamma=0.5)
+    for tm, tn, tk in [(128, 128, 128), (256, 512, 512), (512, 256, 256)]:
+        out = gram(X, X, kern, tm=tm, tn=tn, tk=tk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_fupdate_zero_delta_is_identity():
+    kern = linear()
+    X = jax.random.normal(jax.random.PRNGKey(4), (128, 32), jnp.float32)
+    f = jax.random.normal(jax.random.PRNGKey(5), (128,), jnp.float32)
+    out = fupdate(X, X[:4], jnp.zeros((4,)), f, kern, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(f), atol=1e-6)

@@ -1,0 +1,135 @@
+"""Beyond-paper optimization correctness: fused CE, quantile offsets,
+a2a MoE (multi-device, subprocess), solver stat fusion."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_fused_unembed_ce_matches_naive():
+    from repro.train.train_step import cross_entropy, fused_unembed_ce
+    k = jax.random.PRNGKey(0)
+    h = jax.random.normal(k, (2, 6, 32), jnp.float32)
+    W = jax.random.normal(k, (32, 4096), jnp.float32) * 0.1
+    lb = jax.random.randint(k, (2, 6), 0, 4000)
+    logits = jnp.where(jnp.arange(4096) < 4000, h @ W, -1e30)
+    a = cross_entropy(logits, lb)
+    b = fused_unembed_ce(h, W, lb, vocab_size=4000, chunk=512)
+    assert float(jnp.abs(a - b)) < 1e-5
+    # gradients agree too
+    ga = jax.grad(lambda h: cross_entropy(
+        jnp.where(jnp.arange(4096) < 4000, h @ W, -1e30), lb))(h)
+    gb = jax.grad(lambda h: fused_unembed_ce(
+        h, W, lb, vocab_size=4000, chunk=512))(h)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_ce_ignore_labels():
+    from repro.train.train_step import IGNORE_LABEL, fused_unembed_ce
+    k = jax.random.PRNGKey(1)
+    h = jax.random.normal(k, (1, 4, 16), jnp.float32)
+    W = jax.random.normal(k, (16, 512), jnp.float32)
+    lb = jnp.array([[3, IGNORE_LABEL, 7, IGNORE_LABEL]])
+    out = fused_unembed_ce(h, W, lb, vocab_size=512, chunk=128)
+    assert np.isfinite(float(out))
+
+
+def test_quantile_offsets_restore_slab():
+    from repro.core import (SlabSpec, rbf, solve_blocked,
+                            with_quantile_offsets)
+    from repro.data import make_toy
+    X, y = make_toy(jax.random.PRNGKey(0), 400)
+    spec = SlabSpec(nu1=0.3, nu2=0.05, eps=0.4, kernel=rbf(gamma=0.8))
+    res = solve_blocked(X, spec, P=8, tol=1e-3)
+    fixed = with_quantile_offsets(res.model)
+    # slab has positive width and quantile semantics hold
+    assert float(fixed.rho2) > float(fixed.rho1)
+    s = fixed.raw_scores(X)
+    frac_below = float((s < fixed.rho1).mean())
+    frac_above = float((s > fixed.rho2).mean())
+    assert frac_below == pytest.approx(spec.nu1, abs=0.05)
+    assert frac_above == pytest.approx(spec.nu2, abs=0.05)
+
+
+def test_shrinking_reaches_same_optimum():
+    from repro.core import SlabSpec, dual_objective, rbf, solve_blocked
+    from repro.core.shrinking import solve_blocked_shrinking
+    from repro.data import make_toy
+    X, _ = make_toy(jax.random.PRNGKey(7), 768)
+    spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
+    K = spec.kernel.gram(X.astype(jnp.float32))
+    full = solve_blocked(X, spec, P=8, tol=1e-4)
+    shr = solve_blocked_shrinking(X, spec, P=8, tol=1e-4)
+    assert bool(shr.converged)
+    o1 = float(dual_objective(full.model.gamma, K))
+    o2 = float(dual_objective(shr.model.gamma, K))
+    assert abs(o1 - o2) < 1e-4
+    # constraints hold on the re-assembled full gamma
+    g = shr.model.gamma
+    assert float(jnp.sum(g)) == pytest.approx(spec.total(), abs=1e-4)
+    assert float(jnp.max(g)) <= spec.upper(768) + 1e-6
+    assert float(jnp.min(g)) >= spec.lower(768) - 1e-6
+
+
+def _run(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = REPO_SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout.strip().splitlines()[-1]
+
+
+def test_a2a_moe_matches_global():
+    line = _run("""
+        import json, dataclasses
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_test_mesh
+        from repro.sharding.specs import make_constrain
+        from repro.models.moe import moe_forward, moe_init
+        d, E = 16, 4
+        key = jax.random.PRNGKey(0)
+        p = moe_init(key, d, E, 32, "swiglu", jnp.float32)
+        x = jax.random.normal(key, (4, 8, d), jnp.float32)
+        y0, _ = moe_forward(p, x, n_experts=E, top_k=2,
+                            capacity_factor=float(E), mlp_type="swiglu")
+        mesh = make_test_mesh((2, 2), ("data", "model"))
+        constrain = make_constrain(mesh, fsdp=False)
+        with mesh:
+            y1, _ = jax.jit(lambda p, x: moe_forward(
+                p, x, n_experts=E, top_k=2, capacity_factor=float(E),
+                mlp_type="swiglu", impl="a2a", constrain=constrain))(p, x)
+        print(float(jnp.abs(y0 - y1).max()))
+    """)
+    assert float(line) < 5e-4
+
+
+def test_fused_stats_solver_matches_unfused():
+    line = _run("""
+        import jax, jax.numpy as jnp
+        from repro.core import SlabSpec, rbf, dual_objective
+        from repro.core.distributed_smo import solve_blocked_distributed
+        from repro.data import make_toy
+        X, _ = make_toy(jax.random.PRNGKey(3), 256)
+        spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
+        K = spec.kernel.gram(X.astype(jnp.float32))
+        mesh = jax.make_mesh((4,), ("data",))
+        a = solve_blocked_distributed(X, spec, mesh, data_axes=("data",),
+                                      P_pairs=4, tol=1e-4, fused_stats=True)
+        b = solve_blocked_distributed(X, spec, mesh, data_axes=("data",),
+                                      P_pairs=4, tol=1e-4, fused_stats=False)
+        oa = float(dual_objective(a.model.gamma, K))
+        ob = float(dual_objective(b.model.gamma, K))
+        print(abs(oa - ob))
+    """)
+    assert float(line) < 1e-4

@@ -1,0 +1,136 @@
+"""Core solver tests: the paper's SMO vs the QP baseline, constraint
+preservation, convergence, and rho recovery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SlabSpec, dual_objective, feasible_init, linear,
+                        mcc, rbf, solve_blocked, solve_qp, solve_smo)
+from repro.core.kkt import slab_margin, violation
+from repro.core.ocssvm import recover_rhos
+from repro.data import make_toy
+
+SPECS = [
+    SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5)),
+    SlabSpec(nu1=0.5, nu2=0.01, eps=2.0 / 3.0, kernel=linear()),
+    SlabSpec(nu1=0.3, nu2=0.1, eps=0.4, kernel=rbf(gamma=1.5)),
+]
+
+
+def _toy(m=200, seed=1):
+    return make_toy(jax.random.PRNGKey(seed), m)
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_smo_matches_qp_objective(spec):
+    X, _ = _toy(200)
+    K = spec.kernel.gram(X.astype(jnp.float32))
+    res = solve_smo(X, spec, selection="mvp", tol=1e-4)
+    qp = solve_qp(X, spec, max_iters=60_000, tol=1e-10)
+    o_smo = float(dual_objective(res.model.gamma, K))
+    o_qp = float(dual_objective(qp.gamma, K))
+    assert o_smo <= o_qp + 5e-4 + 0.05 * abs(o_qp)
+
+
+@pytest.mark.parametrize("selection", ["paper", "mvp"])
+def test_selection_modes_agree(selection):
+    spec = SPECS[0]
+    X, _ = _toy(150)
+    K = spec.kernel.gram(X.astype(jnp.float32))
+    res = solve_smo(X, spec, selection=selection, tol=1e-4)
+    qp = solve_qp(X, spec, max_iters=60_000, tol=1e-10)
+    assert float(dual_objective(res.model.gamma, K)) == pytest.approx(
+        float(dual_objective(qp.gamma, K)), abs=2e-3)
+
+
+@pytest.mark.parametrize("spec", SPECS)
+@pytest.mark.parametrize("P", [1, 4, 16])
+def test_blocked_smo_matches_qp(spec, P):
+    X, _ = _toy(192)
+    K = spec.kernel.gram(X.astype(jnp.float32))
+    res = solve_blocked(X, spec, P=P, tol=1e-4)
+    qp = solve_qp(X, spec, max_iters=60_000, tol=1e-10)
+    assert float(dual_objective(res.model.gamma, K)) == pytest.approx(
+        float(dual_objective(qp.gamma, K)), abs=2e-3)
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_constraints_preserved(spec):
+    X, _ = _toy(160)
+    m = X.shape[0]
+    for solver in (lambda: solve_smo(X, spec, selection="mvp", tol=1e-4),
+                   lambda: solve_blocked(X, spec, P=8, tol=1e-4)):
+        g = solver().model.gamma
+        assert float(jnp.sum(g)) == pytest.approx(spec.total(), abs=1e-4)
+        assert float(jnp.max(g)) <= spec.upper(m) + 1e-6
+        assert float(jnp.min(g)) >= spec.lower(m) - 1e-6
+
+
+def test_blocked_on_the_fly_equals_precomputed():
+    # fp reduction-order differences in the kernel rows can flip argmax
+    # selections, so trajectories (gammas) may differ — the reached
+    # optimum must not.
+    spec = SPECS[0]
+    X, _ = _toy(128)
+    K = spec.kernel.gram(X.astype(jnp.float32))
+    r1 = solve_blocked(X, spec, P=8, gram_mode="precomputed", tol=1e-4)
+    r2 = solve_blocked(X, spec, P=8, gram_mode="on_the_fly", tol=1e-4)
+    o1 = float(dual_objective(r1.model.gamma, K))
+    o2 = float(dual_objective(r2.model.gamma, K))
+    assert o1 == pytest.approx(o2, abs=1e-4)
+    assert bool(r1.converged) and bool(r2.converged)
+
+
+def test_feasible_init_always_feasible():
+    for m in (7, 50, 333):
+        for spec in SPECS:
+            g = feasible_init(m, spec)
+            assert float(jnp.sum(g)) == pytest.approx(spec.total(), rel=1e-5)
+            assert float(jnp.max(g)) <= spec.upper(m) + 1e-9
+            assert float(jnp.min(g)) >= spec.lower(m) - 1e-9
+
+
+def test_objective_never_increases_blocked():
+    """Gauss-Seidel blocked steps are monotone descent on the dual."""
+    spec = SPECS[0]
+    X, _ = _toy(96)
+    K = spec.kernel.gram(X.astype(jnp.float32))
+    prev = None
+    g = None
+    for iters in (1, 2, 5, 10, 25, 60):
+        res = solve_blocked(X, spec, P=4, tol=0.0, max_outer=iters)
+        obj = float(dual_objective(res.model.gamma, K))
+        if prev is not None:
+            assert obj <= prev + 1e-6
+        prev = obj
+
+
+def test_decision_function_and_predict():
+    spec = SPECS[0]
+    X, y = _toy(200)
+    res = solve_blocked(X, spec, P=8, tol=1e-4)
+    pred = res.model.predict(X)
+    assert set(np.unique(np.asarray(pred))).issubset({-1, 1})
+    # decision values match sign of predictions
+    dec = res.model.decision_function(X)
+    np.testing.assert_array_equal(np.asarray(pred),
+                                  np.where(np.asarray(dec) >= 0, 1, -1))
+
+
+def test_recover_rhos_midpoint_fallback():
+    # all-at-bound gamma: no free SVs on either plane
+    spec = SlabSpec(nu1=0.5, nu2=0.5, eps=0.5, kernel=linear())
+    m = 8
+    hi, lo = spec.upper(m), spec.lower(m)
+    gamma = jnp.array([hi] * 6 + [lo] * 2)  # sum = 6*0.25 - 2*0.125 = 1.25
+    scores = jnp.arange(m, dtype=jnp.float32)
+    r1, r2 = recover_rhos(gamma, scores, spec)
+    assert np.isfinite(float(r1)) and np.isfinite(float(r2))
+
+
+def test_mcc_basics():
+    y = jnp.array([1, 1, -1, -1])
+    assert float(mcc(y, y)) == pytest.approx(1.0)
+    assert float(mcc(y, -y)) == pytest.approx(-1.0)
+    assert float(mcc(y, jnp.array([1, -1, 1, -1]))) == pytest.approx(0.0)

@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) on the solver invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SlabSpec, feasible_init, linear, rbf, solve_blocked
+from repro.core.qp_baseline import project_box_hyperplane
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=8, max_value=120),
+    nu1=st.floats(min_value=0.15, max_value=0.9),
+    nu2=st.floats(min_value=0.02, max_value=0.5),
+    eps=st.floats(min_value=0.1, max_value=0.9),
+)
+def test_feasible_init_property(m, nu1, nu2, eps):
+    spec = SlabSpec(nu1=nu1, nu2=nu2, eps=eps, kernel=linear())
+    # The box must be able to hold the mass: m * hi >= 1 - eps.
+    if m * spec.upper(m) < spec.total():
+        return
+    g = feasible_init(m, spec)
+    assert abs(float(jnp.sum(g)) - spec.total()) < 1e-4 * max(1, m)
+    assert float(jnp.max(g)) <= spec.upper(m) + 1e-7
+    assert float(jnp.min(g)) >= spec.lower(m) - 1e-7
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n=st.integers(min_value=2, max_value=64),
+    lo=st.floats(min_value=-2.0, max_value=-0.01),
+    hi=st.floats(min_value=0.01, max_value=2.0),
+)
+def test_projection_property(seed, n, lo, hi):
+    """Projection lands in the set and is idempotent."""
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal(n).astype(np.float32)) * 3
+    total = float(np.clip(rng.uniform(n * lo, n * hi), n * lo, n * hi))
+    p = project_box_hyperplane(v, lo, hi, total)
+    assert float(jnp.min(p)) >= lo - 1e-4
+    assert float(jnp.max(p)) <= hi + 1e-4
+    assert abs(float(jnp.sum(p)) - total) < 1e-2 * max(1.0, abs(total))
+    p2 = project_box_hyperplane(p, lo, hi, total)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p2), atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_solver_invariants_random_data(seed):
+    rng = np.random.default_rng(seed)
+    m, d = 64, 5
+    X = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32))
+    spec = SlabSpec(nu1=0.5, nu2=0.1, eps=0.5, kernel=rbf(gamma=0.7))
+    res = solve_blocked(X, spec, P=4, tol=1e-3, max_outer=5000)
+    g = res.model.gamma
+    assert abs(float(jnp.sum(g)) - spec.total()) < 1e-3
+    assert float(jnp.max(g)) <= spec.upper(m) + 1e-6
+    assert float(jnp.min(g)) >= spec.lower(m) - 1e-6
+    # scores consistent with the f maintained internally
+    s = res.model.raw_scores(X)
+    assert np.all(np.isfinite(np.asarray(s)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=9999),
+    m=st.integers(min_value=16, max_value=96),
+)
+def test_kkt_violation_zero_at_qp_optimum(seed, m):
+    """The 5-case KKT violation vanishes at the QP optimum."""
+    import numpy as np
+    from repro.core import solve_qp
+    from repro.core.kkt import violation
+    from repro.core.ocssvm import recover_rhos
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((m, 4)).astype(np.float32))
+    spec = SlabSpec(nu1=0.5, nu2=0.1, eps=0.5, kernel=rbf(gamma=0.5))
+    qp = solve_qp(X, spec, max_iters=30_000, tol=1e-12)
+    f = spec.kernel.gram(X) @ qp.gamma
+    r1, r2 = recover_rhos(qp.gamma, f, spec)
+    v = violation(qp.gamma, f, r1, r2, spec)
+    assert float(jnp.max(v)) < 5e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999))
+def test_decision_sign_consistency(seed):
+    """predict == sign(decision_function) everywhere, incl. boundaries."""
+    import numpy as np
+    from repro.core import solve_blocked
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((64, 3)).astype(np.float32))
+    spec = SlabSpec(nu1=0.4, nu2=0.1, eps=0.5, kernel=rbf(gamma=1.0))
+    res = solve_blocked(X, spec, P=4, tol=1e-3)
+    Q = jnp.asarray(rng.standard_normal((32, 3)).astype(np.float32))
+    dec = np.asarray(res.model.decision_function(Q))
+    pred = np.asarray(res.model.predict(Q))
+    assert ((dec >= 0) == (pred == 1)).all()

@@ -1,0 +1,81 @@
+"""End-to-end behaviour tests: the paper's technique as a first-class
+feature of the framework (backbone features -> OCSSVM slab head -> OOD
+scores), plus the full train->checkpoint->serve loop on a reduced arch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import SlabSpec, fit_head, mcc, pool_features, rbf
+from repro.data.synthetic import SyntheticPipeline
+from repro.models.transformer import forward, init_params
+from repro.train.serve_step import greedy_generate
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def test_train_loss_decreases():
+    cfg = ARCHS["llama3.2-3b"].reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = init_train_state(cfg, params)
+    step = jax.jit(make_train_step(cfg, peak_lr=1e-2, warmup_steps=5,
+                                   total_steps=100))
+    pipe = SyntheticPipeline(cfg, batch=4, seq_len=32, seed=0)
+    losses = []
+    for _ in range(25):
+        state, m = step(state, pipe.next_batch())
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5
+
+
+def test_greedy_generate_shapes():
+    cfg = ARCHS["musicgen-large"].reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    out = greedy_generate(cfg, params, prompt, n_new=6)
+    assert out.shape == (2, 6)
+    assert int(out.max()) < cfg.padded_vocab
+
+
+def test_ocssvm_head_on_backbone_features():
+    """The paper's integration: slab head over LM hidden states separates
+    in-distribution text from corrupted/OOD text."""
+    cfg = ARCHS["llama3.2-3b"].reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+
+    def features(tokens):
+        # pre-logits hidden state via a forward hook: reuse logits path and
+        # take the unembedding input by re-running without the head
+        logits, _, _ = forward(params, cfg, tokens=tokens)
+        return pool_features(logits[..., :64], "mean")  # low-dim proxy
+
+    # in-distribution: low token ids (narrow marginal); OOD: uniform ids
+    k1, k2, k3 = jax.random.split(key, 3)
+    toks_in = jax.random.randint(k1, (96, 16), 0, 40)
+    toks_in2 = jax.random.randint(k2, (48, 16), 0, 40)
+    toks_out = jax.random.randint(k3, (48, 16),
+                                  cfg.vocab_size - 40, cfg.vocab_size)
+
+    spec = SlabSpec(nu1=0.2, nu2=0.1, eps=0.3, kernel=rbf(gamma=0.05))
+    head = fit_head(features(toks_in), spec, solver="blocked", tol=1e-3)
+
+    s_in = np.asarray(head.score(features(toks_in2)))
+    s_out = np.asarray(head.score(features(toks_out)))
+    # in-distribution scores rank above OOD (AUC > 0.8)
+    auc = float(np.mean(s_in[:, None] > s_out[None, :]))
+    assert auc > 0.8, f"AUC={auc}"
+
+
+def test_paper_protocol_mini():
+    """Paper Section 4 protocol at reduced size: linear kernel,
+    nu1=.5 nu2=.01 eps=2/3 — converges and produces a valid MCC."""
+    from repro.configs.ocssvm_paper import PAPER_SPEC
+    from repro.core import solve_smo
+    from repro.data import make_toy
+    X, y = make_toy(jax.random.PRNGKey(0), 300)
+    res = solve_smo(X, PAPER_SPEC, selection="paper", tol=1e-3,
+                    max_iters=50_000)
+    assert bool(res.converged)
+    m = float(mcc(y, res.model.predict(X)))
+    assert -1.0 <= m <= 1.0

@@ -11,7 +11,8 @@ import time
 
 import jax
 
-from repro.core import SlabSpec, rbf, solve_blocked
+import repro
+from repro.core import SlabSpec, rbf
 from repro.data import make_toy
 
 
@@ -29,16 +30,20 @@ def run():
     rows = []
     m = 2048
     X, _ = make_toy(jax.random.PRNGKey(0), m)
+    # gram_mode pinned so the sweep stays apples-to-apples (fit's auto
+    # heuristic would switch provider with m).
     for P in (1, 4, 16, 64):
-        res, t = _timed(lambda: solve_blocked(X, spec, P=P, tol=1e-3,
-                                              max_outer=50_000))
+        res, t = _timed(lambda: repro.fit(X, spec, strategy="blocked", P=P,
+                                          gram_mode="on_the_fly", tol=1e-3,
+                                          max_outer=50_000))
         rows.append({"sweep": "P", "m": m, "P": P, "time_s": t,
                      "iters": int(res.iters),
                      "converged": bool(res.converged)})
     for m2 in (512, 1024, 2048, 4096):
         X2, _ = make_toy(jax.random.PRNGKey(0), m2)
-        res, t = _timed(lambda: solve_blocked(X2, spec, P=16, tol=1e-3,
-                                              max_outer=50_000))
+        res, t = _timed(lambda: repro.fit(X2, spec, strategy="blocked", P=16,
+                                          gram_mode="on_the_fly", tol=1e-3,
+                                          max_outer=50_000))
         rows.append({"sweep": "m", "m": m2, "P": 16, "time_s": t,
                      "iters": int(res.iters),
                      "converged": bool(res.converged)})

@@ -13,8 +13,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.configs.ocssvm_paper import PAPER_SPEC, TABLE1_SIZES
-from repro.core import mcc, solve_blocked, solve_qp, solve_smo
+from repro.core import mcc, solve_qp
 from repro.data import make_toy
 
 
@@ -32,12 +33,17 @@ def run(sizes=TABLE1_SIZES):
     rows = []
     for m in sizes:
         X, y = make_toy(jax.random.PRNGKey(0), m)
-        res_p, t_p = _timed(lambda: solve_smo(
-            X, PAPER_SPEC, selection="paper", tol=1e-3, max_iters=100_000))
-        res_m, t_m = _timed(lambda: solve_smo(
-            X, PAPER_SPEC, selection="mvp", tol=1e-3, max_iters=100_000))
-        res_b, t_b = _timed(lambda: solve_blocked(
-            X, PAPER_SPEC, P=16, tol=1e-3, max_outer=50_000))
+        # gram_mode pinned per solver (the historical defaults) so timings
+        # stay comparable across m and with previously recorded numbers.
+        res_p, t_p = _timed(lambda: repro.fit(
+            X, PAPER_SPEC, strategy="paper", gram_mode="precomputed",
+            tol=1e-3, max_iters=100_000))
+        res_m, t_m = _timed(lambda: repro.fit(
+            X, PAPER_SPEC, strategy="mvp", gram_mode="precomputed",
+            tol=1e-3, max_iters=100_000))
+        res_b, t_b = _timed(lambda: repro.fit(
+            X, PAPER_SPEC, strategy="blocked", gram_mode="on_the_fly",
+            P=16, tol=1e-3, max_outer=50_000))
         res_q, t_q = _timed(lambda: solve_qp(
             X, PAPER_SPEC, max_iters=20_000, tol=1e-9))
         rows.append({

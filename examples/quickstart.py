@@ -4,9 +4,9 @@
 """
 import jax
 
+import repro
 from repro.configs.ocssvm_paper import PAPER_SPEC
-from repro.core import (SlabSpec, mcc, rbf, solve_blocked, solve_smo,
-                        with_quantile_offsets)
+from repro.core import SlabSpec, mcc, rbf, with_quantile_offsets
 from repro.data import make_toy
 
 
@@ -14,15 +14,15 @@ def main():
     X, y = make_toy(jax.random.PRNGKey(0), 1000)
 
     print("== paper-faithful SMO (Algorithm 1, paper's linear protocol) ==")
-    res = solve_smo(X, PAPER_SPEC, selection="paper", tol=1e-3)
+    res = repro.fit(X, PAPER_SPEC, strategy="paper", tol=1e-3)
     print(f"iters={int(res.iters)} converged={bool(res.converged)} "
           f"rho1={float(res.model.rho1):.4f} rho2={float(res.model.rho2):.4f}")
     print(f"train MCC = {float(mcc(y, res.model.predict(X))):.3f} "
           f"(paper Table 1 reports 0.13 at m=1000)")
 
-    print("== blocked TPU-native SMO (beyond paper, P=16, RBF) ==")
+    print("== blocked TPU-native SMO (engine auto strategy, P=16, RBF) ==")
     spec = SlabSpec(nu1=0.3, nu2=0.05, eps=0.4, kernel=rbf(gamma=0.8))
-    res_b = solve_blocked(X, spec, P=16, tol=1e-3)
+    res_b = repro.fit(X, spec, P=16, tol=1e-3)
     model = with_quantile_offsets(res_b.model)   # primal-consistent slab
     print(f"iters={int(res_b.iters)} converged={bool(res_b.converged)} "
           f"MCC={float(mcc(y, model.predict(X))):.3f}")

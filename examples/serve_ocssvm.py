@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SlabSpec, rbf, solve_blocked, with_quantile_offsets
+import repro
+from repro.core import SlabSpec, rbf, with_quantile_offsets
 from repro.data import make_toy
 from repro.kernels import decision
 
@@ -19,7 +20,7 @@ from repro.kernels import decision
 def main():
     spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
     X, _ = make_toy(jax.random.PRNGKey(0), 2000)
-    res = solve_blocked(X, spec, P=16, tol=1e-3)
+    res = repro.fit(X, spec, P=16, tol=1e-3)   # auto provider+selector
     model = with_quantile_offsets(res.model)  # beyond-paper: usable slab
     print(f"model: {int(jnp.sum(jnp.abs(model.gamma) > 1e-7))} SVs, "
           f"slab [{float(model.rho1):.4f}, {float(model.rho2):.4f}]")

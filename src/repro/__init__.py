@@ -1,0 +1,16 @@
+"""repro — One-Class Slab SVM reproduction as a JAX/Pallas system.
+
+``repro.fit(X, spec)`` is the front door: it composes the solver engine
+(``repro.core.engine``) for the problem size and hardware. The import is
+lazy so lightweight subpackage imports stay cheap.
+"""
+
+
+def __getattr__(name):
+    if name == "fit":
+        from repro.api import fit
+        return fit
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = ["fit"]

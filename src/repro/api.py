@@ -1,0 +1,108 @@
+"""Top-level training entry point: pick an engine composition by problem.
+
+``repro.fit(X, spec)`` routes to the right (GramProvider x Selector)
+composition of the solver engine for the problem size and hardware:
+
+* small m            -> blocked solver, precomputed Gram (O(m^2) is cheap)
+* medium m           -> blocked solver, on-the-fly rows (no m^2 memory);
+                        the fused Pallas f-update on TPU
+* large m            -> shrinking repack driver around the blocked solver
+* mesh given         -> row-sharded solver over the mesh's data axes
+
+Every strategy returns the same ``SMOResult``; explicit strategies are
+available for benchmarks and tests that compare compositions.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.batched_smo import solve_blocked
+from repro.core.distributed_smo import solve_blocked_distributed
+from repro.core.engine.gram import SINGLE_PASS_MAX
+from repro.core.engine.types import SMOResult
+from repro.core.ocssvm import SlabSpec
+from repro.core.shrinking import solve_blocked_shrinking
+from repro.core.smo import solve as solve_smo
+
+Array = jax.Array
+
+# Above this row count the shrinking repack driver wins: per-iteration
+# work drops to the active (support-vector) set.
+_SHRINKING_MIN_M = 8192
+
+STRATEGIES = ("auto", "paper", "mvp", "blocked", "shrinking", "distributed")
+
+
+def _auto_gram_mode(m: int) -> str:
+    if m <= SINGLE_PASS_MAX // 2:
+        return "precomputed"
+    if jax.default_backend() == "tpu":
+        return "pallas"            # fused fupdate kernel on the MXU
+    return "on_the_fly"
+
+
+def fit(
+    X: Array,
+    spec: Optional[SlabSpec] = None,
+    *,
+    strategy: str = "auto",
+    gram_mode: Optional[str] = None,
+    P: int = 8,
+    tol: float = 1e-4,
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+    **kwargs,
+) -> SMOResult:
+    """Train a One-Class Slab SVM; returns an ``SMOResult``.
+
+    strategy: "auto" (size/hardware heuristic), "paper" / "mvp" (the
+    sequential Algorithm 1 selectors), "blocked", "shrinking", or
+    "distributed" (requires ``mesh``). Extra kwargs flow to the chosen
+    solver (max_iters/max_outer, patience, gamma0, ...).
+    """
+    if spec is None:
+        spec = SlabSpec()
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"expected one of {STRATEGIES}")
+    m = X.shape[0]
+
+    if strategy == "auto":
+        if mesh is not None:
+            strategy = "distributed"
+        elif m > _SHRINKING_MIN_M:
+            strategy = "shrinking"
+        else:
+            strategy = "blocked"
+
+    # The sequential solvers call their iteration cap max_iters, the
+    # blocked family max_outer; accept either so "auto" can reroute a call
+    # without the caller caring which solver won.
+    if strategy in ("paper", "mvp"):
+        if "max_outer" in kwargs:
+            kwargs["max_iters"] = kwargs.pop("max_outer")
+    elif "max_iters" in kwargs:
+        kwargs["max_outer"] = kwargs.pop("max_iters")
+
+    if strategy == "distributed":
+        if mesh is None:
+            raise ValueError("strategy='distributed' needs a mesh")
+        if gram_mode is not None:
+            raise ValueError(
+                "gram_mode is not configurable for the distributed "
+                "strategy: the sharded provider owns Gram access "
+                "(Pallas-in-shard is a ROADMAP open item)")
+        return solve_blocked_distributed(X, spec, mesh,
+                                         data_axes=data_axes, P_pairs=P,
+                                         tol=tol, **kwargs)
+
+    gm = gram_mode if gram_mode is not None else _auto_gram_mode(m)
+    if strategy in ("paper", "mvp"):
+        return solve_smo(X, spec, selection=strategy, gram_mode=gm, tol=tol,
+                         **kwargs)
+    if strategy == "shrinking":
+        return solve_blocked_shrinking(X, spec, P=P, gram_mode=gm, tol=tol,
+                                       **kwargs)
+    return solve_blocked(X, spec, P=P, gram_mode=gm, tol=tol, **kwargs)

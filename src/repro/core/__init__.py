@@ -1,4 +1,10 @@
-"""repro.core — the paper's contribution: OCSSVM + fast SMO training."""
+"""repro.core — the paper's contribution: OCSSVM + fast SMO training.
+
+All solvers are facades over the pluggable engine in
+``repro.core.engine`` (GramProvider x Selector x one while-loop driver);
+``repro.fit`` picks the composition automatically.
+"""
+from repro.core import engine
 from repro.core.kernel_fn import KernelFn, linear, poly, rbf
 from repro.core.ocssvm import (OCSSVMModel, SlabSpec, dual_objective,
                                feasible_init, recover_rhos,
@@ -13,9 +19,11 @@ from repro.core.head import FittedHead, fit_head, pool_features
 from repro.core.distributed_smo import solve_blocked_distributed
 
 __all__ = [
+    "engine",
     "KernelFn", "linear", "rbf", "poly",
     "OCSSVMModel", "SlabSpec", "dual_objective", "feasible_init",
     "recover_rhos", "slab_margin", "violation", "n_violators", "converged",
-    "SMOResult", "solve_smo", "solve_blocked",
+    "SMOResult", "solve_smo", "solve_blocked", "solve_blocked_shrinking",
+    "solve_blocked_distributed", "with_quantile_offsets",
     "QPResult", "project_box_hyperplane", "solve_qp", "mcc",
 ]

@@ -1,54 +1,40 @@
-"""Blocked SMO — the beyond-paper TPU-native solver.
+"""Blocked SMO — the beyond-paper TPU-native solver (engine facade).
 
-Instead of one violating pair per iteration (paper Algorithm 1), each outer
-step:
-
-1. selects ``P`` disjoint maximal-violating pairs in one vectorized sweep
-   (P smallest-score coordinates that can grow x P largest-score
-   coordinates that can shrink — the Keerthi working set generalized to a
-   block),
-2. runs **Gauss-Seidel** over the P analytic 2-variable subproblems using
-   only the small (2P x 2P) Gram block to keep the selected scores exact
-   (each inner step is then a true block-coordinate-descent step =>
-   monotone descent, same fixed points as the paper's update),
-3. applies ONE rank-2P f-cache update  f += K(X, X_sel) @ delta_gamma —
-   an (m x d)(d x 2P)(2P) matmul chain on the MXU instead of 2P separate
-   vector AXPYs.
+Instead of one violating pair per iteration (paper Algorithm 1), each
+outer step selects ``P`` disjoint maximal-violating pairs in one
+vectorized sweep, runs Gauss-Seidel over the P analytic 2-variable
+subproblems against the small (2P x 2P) Gram block, and applies ONE
+rank-2P f-cache update f += K(X, X_sel) @ delta — an MXU matmul chain
+instead of 2P separate vector AXPYs. With ``gram_mode="pallas"`` that
+update is the fused Pallas ``fupdate`` kernel: one HBM pass over X per
+iteration (interpret mode on CPU).
 
 Feasibility is exact: every pair moves on the equality hyperplane and is
 clipped to the box. P=1 reduces to the paper's update rule (tests assert
 objective parity with the sequential solver and the QP baseline).
+
+All of the loop logic lives in ``repro.core.engine``; this module only
+composes (BlockSelector x chosen GramProvider) and keeps the historical
+signature.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernel_fn import KernelFn
-from repro.core.kkt import violation
-from repro.core.ocssvm import OCSSVMModel, SlabSpec, feasible_init, recover_rhos
-from repro.core.smo import SMOResult, raw_scores_blocked
+from repro.core import engine
+from repro.core.engine.types import SMOResult
+from repro.core.ocssvm import (OCSSVMModel, SlabSpec, concrete_spec,
+                               feasible_init)
 
 Array = jax.Array
 
-
-class BlockedState(NamedTuple):
-    gamma: Array
-    f: Array
-    rho1: Array
-    rho2: Array
-    it: Array
-    n_viol: Array
-    max_viol: Array
-    gap: Array
-    stall: Array
+__all__ = ["solve_blocked"]
 
 
-@partial(jax.jit, static_argnames=("P", "gram_mode", "tol", "max_outer",
-                                   "patience"))
 def solve_blocked(
     X: Array,
     spec: SlabSpec,
@@ -64,96 +50,53 @@ def solve_blocked(
     """f_offset: constant per-row score contribution from coordinates
     OUTSIDE this problem (the shrinking driver freezes bound coordinates
     and solves the active subset; their kernel contribution to each active
-    row's score rides along as this offset)."""
+    row's score rides along as this offset).
+
+    The spec stays a traced pytree except under gram_mode="pallas", where
+    the Pallas kernel must specialize on concrete kernel parameters (the
+    concretized spec becomes a static jit argument)."""
+    kw = dict(P=P, gram_mode=gram_mode, tol=tol, max_outer=max_outer,
+              patience=patience, gamma0=gamma0, f_offset=f_offset)
+    if gram_mode == "pallas":
+        return _solve_static(X, concrete_spec(spec), **kw)
+    return _solve_traced(X, spec, **kw)
+
+
+def _solve_impl(
+    X: Array,
+    spec: SlabSpec,
+    *,
+    P: int,
+    gram_mode: str,
+    tol: float,
+    max_outer: int,
+    patience: int,
+    gamma0: Optional[Array],
+    f_offset: Optional[Array],
+) -> SMOResult:
     m, _ = X.shape
-    kernel = spec.kernel
-    dtype = jnp.float32
-    Xf = X.astype(dtype)
-
-    gamma = feasible_init(m, spec, dtype) if gamma0 is None else gamma0.astype(dtype)
-    K = kernel.gram(Xf) if gram_mode == "precomputed" else None
-    diagK = kernel.diag(Xf)
-    f = (K @ gamma) if K is not None else raw_scores_blocked(Xf, gamma, kernel)
-    if f_offset is not None:
-        f = f + f_offset.astype(dtype)
-    rho1, rho2 = recover_rhos(gamma, f, spec)
-
+    Xf = X.astype(jnp.float32)
     hi, lo = spec.upper(m), spec.lower(m)
-    bnd = 1e-8 * (hi - lo)
-    tiny = jnp.asarray(1e-12, dtype)
-    neg = jnp.asarray(-jnp.inf, dtype)
-    pos = jnp.asarray(jnp.inf, dtype)
 
-    def diagnostics(gamma, f, rho1, rho2):
-        v = violation(gamma, f, rho1, rho2, spec)
-        up = gamma < hi - bnd
-        dn = gamma > lo + bnd
-        gap = jnp.max(jnp.where(dn, f, neg)) - jnp.min(jnp.where(up, f, pos))
-        return v, gap
+    gamma = (feasible_init(m, spec, jnp.float32) if gamma0 is None
+             else gamma0.astype(jnp.float32))
 
-    v0, gap0 = diagnostics(gamma, f, rho1, rho2)
-    state = BlockedState(gamma, f, rho1, rho2,
-                         jnp.zeros((), jnp.int32),
-                         jnp.sum(v0 > tol).astype(jnp.int32),
-                         jnp.max(v0), gap0, jnp.zeros((), jnp.int32))
+    provider = engine.make_provider(gram_mode, Xf, spec.kernel)
+    selector = engine.BlockSelector(provider, P=P, hi=hi, lo=lo)
+    stats_fn = partial(engine.solver_stats_fresh, hi=hi, lo=lo, m=m, tol=tol)
 
-    def cond(s: BlockedState):
-        return (s.it < max_outer) & (s.gap > tol) & (s.stall < patience)
+    state0 = engine.init_state(provider, stats_fn, gamma, f_offset=f_offset)
+    s = engine.run(provider, selector, stats_fn, state0, hi=hi, lo=lo,
+                   tol=tol, max_iters=max_outer, patience=patience)
 
-    def body(s: BlockedState):
-        up = s.gamma < hi - bnd
-        dn = s.gamma > lo + bnd
-        # P "grow" coordinates: smallest scores among movable-up.
-        _, up_idx = jax.lax.top_k(jnp.where(up, -s.f, neg), P)
-        # P "shrink" coordinates: largest scores among movable-down,
-        # excluding the grow set (disjointness).
-        dn_score = jnp.where(dn, s.f, neg).at[up_idx].set(neg)
-        _, dn_idx = jax.lax.top_k(dn_score, P)
-        sel = jnp.concatenate([up_idx, dn_idx])          # (2P,)
-
-        if K is not None:
-            Krows = K[:, sel]                            # (m, 2P)
-        else:
-            Krows = kernel.rows(Xf, Xf[sel])             # (m, 2P)
-        Kblk = Krows[sel]                                # (2P, 2P)
-
-        g_sel0 = s.gamma[sel]
-        f_sel0 = s.f[sel]
-        dsel = diagK[sel]
-
-        # Gauss-Seidel over pairs (k, P+k): exact analytic step per pair
-        # against the *current* selected scores (paper eq. 35-39).
-        def inner(k, carry):
-            g_sel, f_sel = carry
-            ib, ia = k, P + k                    # b grows, a shrinks
-            eta = 1.0 / jnp.maximum(dsel[ia] + dsel[ib] - 2.0 * Kblk[ia, ib],
-                                    tiny)
-            t = g_sel[ia] + g_sel[ib]
-            L = jnp.maximum(t - hi, lo)
-            H = jnp.minimum(hi, t - lo)
-            gb_new = jnp.clip(g_sel[ib] + eta * (f_sel[ia] - f_sel[ib]), L, H)
-            dgb = gb_new - g_sel[ib]
-            # Degenerate pair (duplicate index from top_k ties): freeze.
-            dgb = jnp.where(sel[ia] == sel[ib], 0.0, dgb)
-            g_sel = g_sel.at[ib].add(dgb).at[ia].add(-dgb)
-            f_sel = f_sel + dgb * (Kblk[:, ib] - Kblk[:, ia])
-            return g_sel, f_sel
-
-        g_sel, _ = jax.lax.fori_loop(0, P, inner, (g_sel0, f_sel0))
-        delta = g_sel - g_sel0                            # (2P,)
-
-        gamma_new = s.gamma.at[sel].add(delta)
-        f_new = s.f + Krows @ delta                       # rank-2P update
-        r1, r2 = recover_rhos(gamma_new, f_new, spec)
-
-        v_new, gap_new = diagnostics(gamma_new, f_new, r1, r2)
-        progressed = jnp.max(jnp.abs(delta)) > tiny * 10
-        stall = jnp.where(progressed, 0, s.stall + 1).astype(jnp.int32)
-        return BlockedState(gamma_new, f_new, r1, r2, s.it + 1,
-                            jnp.sum(v_new > tol).astype(jnp.int32),
-                            jnp.max(v_new), gap_new, stall)
-
-    s = jax.lax.while_loop(cond, body, state)
-    model = OCSSVMModel(gamma=s.gamma, rho1=s.rho1, rho2=s.rho2, X=Xf, spec=spec)
+    model = OCSSVMModel(gamma=s.gamma, rho1=s.rho1, rho2=s.rho2, X=Xf,
+                        spec=spec)
     return SMOResult(model=model, iters=s.it, n_viol=s.n_viol,
-                     max_viol=s.max_viol, gap=s.gap, converged=s.gap <= tol)
+                     max_viol=s.max_viol, gap=s.gap,
+                     converged=s.gap <= tol)
+
+
+_SOLVE_STATIC = ("P", "gram_mode", "tol", "max_outer", "patience")
+_solve_traced = partial(jax.jit, static_argnames=_SOLVE_STATIC)(_solve_impl)
+_solve_static = partial(jax.jit,
+                        static_argnames=_SOLVE_STATIC + ("spec",))(_solve_impl)

@@ -1,52 +1,48 @@
-"""Data-parallel blocked SMO over the production mesh (shard_map).
+"""Data-parallel blocked SMO over the production mesh (engine facade).
 
 The training set X, the dual vector gamma, and the f-cache are sharded by
 rows across the mesh's data axes (("data",) single-pod, ("pod","data")
-multi-pod). Each outer iteration:
+multi-pod). The whole solve is the SAME engine driver as the single-device
+solvers, run inside ``shard_map`` with the sharded provider/selector:
 
-1. every shard proposes its local top-P grow / top-P shrink candidates
-   (values + global row ids + the candidate rows of X),
-2. one ``all_gather`` of the tiny candidate set (O(P) scalars + P*d floats
-   per shard — independent of m) makes selection *globally identical* on
-   every device,
-3. the Gauss-Seidel pair solve runs replicated (2P x 2P block),
-4. each shard applies the rank-2P f update to its local rows only —
-   no communication — and scatters delta-gamma into its local slice,
-5. rho recovery / convergence tests are psum/pmax tree reductions.
+1. ``ShardedBlockSelector``: every shard proposes its local top-P grow /
+   top-P shrink candidates; one ``all_gather`` of the tiny packed
+   candidate set (O(P) scalars + P*d floats per shard — independent of m)
+   makes selection *globally identical* on every device,
+2. the Gauss-Seidel pair solve runs replicated (2P x 2P block),
+3. ``ShardedGram`` applies the rank-2P f update to the local rows only —
+   no communication — and scatters delta-gamma into the local slice,
+4. rho recovery / convergence tests are the fused-stats reductions
+   (``engine.stats.solver_stats_prev``): ONE psum of a stacked vector plus
+   ONE pmax per iteration instead of 12 small collectives. At production
+   scale each small all-reduce is latency-bound (~10 us on multi-hop ICI),
+   so this drops the per-iteration critical path ~6x (hillclimb 3,
+   EXPERIMENTS.md).
 
 Per-iteration communication is O(P d) — independent of m — which is what
 makes the paper's "scales to large training sets" claim hold at pod scale:
 compute per shard is O(m_local d), halving with every doubling of shards.
 
-The un-sharded reference (`solve_blocked`) produces identical selections on
-one device; tests assert distributed == single-device trajectories.
+The un-sharded reference (`solve_blocked`) produces identical selections
+on one device; tests assert distributed == single-device optima.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.kernel_fn import KernelFn
+from repro.core import engine
+from repro.core.engine.types import SMOResult
 from repro.core.ocssvm import OCSSVMModel, SlabSpec, feasible_init
-from repro.core.smo import SMOResult
+from repro.utils.compat import shard_map
 
 Array = jax.Array
 
-
-class _DistState(NamedTuple):
-    gamma: Array   # (m_local,)
-    f: Array       # (m_local,)
-    rho1: Array
-    rho2: Array
-    it: Array
-    n_viol: Array
-    max_viol: Array
-    gap: Array
-    stall: Array
+__all__ = ["solve_blocked_distributed"]
 
 
 def _axis_rank(data_axes: Sequence[str], sizes: Sequence[int]) -> Array:
@@ -71,16 +67,15 @@ def solve_blocked_distributed(
 ) -> SMOResult:
     """Solve the OCSSVM dual with X row-sharded over ``data_axes``.
 
-    fused_stats: pack the per-iteration scalar reductions (rho-recovery
-    sums/counts, interval endpoints, violation stats, MVP gap) into ONE
-    psum of a stacked vector plus ONE pmax (mins negated) — 2 collectives
-    per iteration instead of 12. At production scale each small
-    all-reduce is latency-bound (~10 us on multi-hop ICI), so the solver's
-    per-iteration critical path drops ~6x (hillclimb 3, EXPERIMENTS.md).
+    fused_stats: retained for signature compatibility. The engine's
+    sharded statistics path (``solver_stats_prev``) IS the fused
+    implementation — 2 collectives per iteration — and is always used;
+    there is no slower unfused path to fall back to anymore.
     rho_every=k recomputes rho1/rho2 every k iterations (the margin-SV
     averages drift slowly near convergence; the paper recomputes each
     step).
     """
+    del fused_stats
     m, d = X.shape
     kernel = spec.kernel
     sizes = tuple(int(mesh.shape[ax]) for ax in data_axes)
@@ -90,272 +85,35 @@ def solve_blocked_distributed(
     m_pad = ((m + n_shards - 1) // n_shards) * n_shards
     m_local = m_pad // n_shards
 
-    dtype = jnp.float32
-    Xf = jnp.pad(X.astype(dtype), ((0, m_pad - m), (0, 0)))
-    valid = (jnp.arange(m_pad) < m)
-    gamma0 = jnp.pad(feasible_init(m, spec, dtype), (0, m_pad - m))
+    Xf = jnp.pad(X.astype(jnp.float32), ((0, m_pad - m), (0, 0)))
+    valid = jnp.arange(m_pad) < m
+    gamma0 = jnp.pad(feasible_init(m, spec, jnp.float32), (0, m_pad - m))
 
     hi, lo = spec.upper(m), spec.lower(m)
-    bnd = 1e-8 * (hi - lo)
-    tiny = jnp.asarray(1e-12, dtype)
-    neg = jnp.asarray(-jnp.inf, dtype)
-    pos = jnp.asarray(jnp.inf, dtype)
-    PP = P_pairs
-
-    def _psum(x):
-        return jax.lax.psum(x, data_axes)
-
-    def _pmax(x):
-        return jax.lax.pmax(x, data_axes)
-
-    def _pmin(x):
-        return jax.lax.pmin(x, data_axes)
-
-    def _recover_rhos(gamma_l, f_l, valid_l):
-        ghi = hi * 1e-6 * m
-        glo = -lo * 1e-6 * m
-        free_lower = valid_l & (gamma_l > ghi) & (gamma_l < hi - ghi)
-        free_upper = valid_l & (gamma_l < -glo) & (gamma_l > lo + glo)
-        sum1 = _psum(jnp.sum(jnp.where(free_lower, f_l, 0.0)))
-        n1 = _psum(jnp.sum(free_lower))
-        sum2 = _psum(jnp.sum(jnp.where(free_upper, f_l, 0.0)))
-        n2 = _psum(jnp.sum(free_upper))
-        mean1 = sum1 / jnp.maximum(n1, 1)
-        mean2 = sum2 / jnp.maximum(n2, 1)
-
-        big = jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
-        at_hi = valid_l & (gamma_l >= hi - ghi)
-        at_lo = valid_l & (gamma_l <= lo + glo)
-        nonneg = valid_l & (gamma_l >= -glo)
-        nonpos = valid_l & (gamma_l <= ghi)
-        r1_lo = _pmax(jnp.max(jnp.where(at_hi, f_l, -big)))
-        r1_hi = _pmin(jnp.min(jnp.where(nonpos, f_l, big)))
-        r1_mid = jnp.where((r1_lo > -big / 2) & (r1_hi < big / 2),
-                           0.5 * (r1_lo + r1_hi),
-                           jnp.where(r1_hi < big / 2, r1_hi, r1_lo))
-        r2_lo = _pmax(jnp.max(jnp.where(nonneg, f_l, -big)))
-        r2_hi = _pmin(jnp.min(jnp.where(at_lo, f_l, big)))
-        r2_mid = jnp.where((r2_lo > -big / 2) & (r2_hi < big / 2),
-                           0.5 * (r2_lo + r2_hi),
-                           jnp.where(r2_lo > -big / 2, r2_lo, r2_hi))
-        rho1 = jnp.where(n1 > 0, mean1, r1_mid)
-        rho2 = jnp.where(n2 > 0, mean2, r2_mid)
-        return rho1, rho2
-
-    def _violation(gamma_l, f_l, rho1, rho2, valid_l):
-        bt_hi = hi * 1e-8 * m
-        bt_lo = -lo * 1e-8 * m
-        at_zero = jnp.abs(gamma_l) <= jnp.minimum(bt_hi, bt_lo)
-        at_hi = gamma_l >= hi - bt_hi
-        at_lo = gamma_l <= lo + bt_lo
-        free_pos = (~at_zero) & (~at_hi) & (gamma_l > 0)
-        free_neg = (~at_zero) & (~at_lo) & (gamma_l < 0)
-        v = jnp.where(at_zero,
-                      jnp.maximum(jnp.maximum(rho1 - f_l, f_l - rho2), 0.0), 0.0)
-        v = jnp.where(free_pos, jnp.abs(f_l - rho1), v)
-        v = jnp.where(at_hi, jnp.maximum(f_l - rho1, 0.0), v)
-        v = jnp.where(free_neg, jnp.abs(f_l - rho2), v)
-        v = jnp.where(at_lo, jnp.maximum(rho2 - f_l, 0.0), v)
-        return jnp.where(valid_l, v, 0.0)
-
-    def _fused_stats(gamma_l, f_l, valid_l, rho1_prev, rho2_prev,
-                     recompute_rho):
-        """All per-iteration scalar statistics in 2 collectives.
-
-        psum vector: [sum_free_lower_f, n_free_lower, sum_free_upper_f,
-                      n_free_upper, n_violators]
-        pmax vector: [r1_lo, r2_lo, -r1_hi, -r2_hi, max_viol,
-                      max_f_down, -min_f_up]   (mins as negated maxes)
-        """
-        ghi = hi * 1e-6 * m
-        glo = -lo * 1e-6 * m
-        big = jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
-
-        free_lower = valid_l & (gamma_l > ghi) & (gamma_l < hi - ghi)
-        free_upper = valid_l & (gamma_l < -glo) & (gamma_l > lo + glo)
-        at_hi = valid_l & (gamma_l >= hi - ghi)
-        at_lo = valid_l & (gamma_l <= lo + glo)
-        nonneg = valid_l & (gamma_l >= -glo)
-        nonpos = valid_l & (gamma_l <= ghi)
-        up = valid_l & (gamma_l < hi - bnd)
-        dn = valid_l & (gamma_l > lo + bnd)
-
-        # provisional violation against the PREVIOUS rho (one round trip):
-        v = _violation(gamma_l, f_l, rho1_prev, rho2_prev, valid_l)
-
-        psum_vec = jnp.stack([
-            jnp.sum(jnp.where(free_lower, f_l, 0.0)),
-            jnp.sum(free_lower).astype(dtype),
-            jnp.sum(jnp.where(free_upper, f_l, 0.0)),
-            jnp.sum(free_upper).astype(dtype),
-            jnp.sum(v > tol).astype(dtype),
-        ])
-        pmax_vec = jnp.stack([
-            jnp.max(jnp.where(at_hi, f_l, -big)),
-            jnp.max(jnp.where(nonneg, f_l, -big)),
-            -jnp.min(jnp.where(nonpos, f_l, big)),
-            -jnp.min(jnp.where(at_lo, f_l, big)),
-            jnp.max(v),
-            jnp.max(jnp.where(dn, f_l, neg)),
-            -jnp.min(jnp.where(up, f_l, pos)),
-        ])
-        ps = jax.lax.psum(psum_vec, data_axes)
-        pm = jax.lax.pmax(pmax_vec, data_axes)
-
-        mean1 = ps[0] / jnp.maximum(ps[1], 1.0)
-        mean2 = ps[2] / jnp.maximum(ps[3], 1.0)
-        r1_lo, r2_lo, r1_hi, r2_hi = pm[0], pm[1], -pm[2], -pm[3]
-        r1_mid = jnp.where((r1_lo > -big / 2) & (r1_hi < big / 2),
-                           0.5 * (r1_lo + r1_hi),
-                           jnp.where(r1_hi < big / 2, r1_hi, r1_lo))
-        r2_mid = jnp.where((r2_lo > -big / 2) & (r2_hi < big / 2),
-                           0.5 * (r2_lo + r2_hi),
-                           jnp.where(r2_lo > -big / 2, r2_lo, r2_hi))
-        rho1 = jnp.where(ps[1] > 0, mean1, r1_mid)
-        rho2 = jnp.where(ps[3] > 0, mean2, r2_mid)
-        rho1 = jnp.where(recompute_rho, rho1, rho1_prev)
-        rho2 = jnp.where(recompute_rho, rho2, rho2_prev)
-        n_viol = ps[4].astype(jnp.int32)
-        max_viol = pm[4]
-        gap = pm[5] - (-pm[6])
-        return rho1, rho2, n_viol, max_viol, gap
 
     def local_solve(X_l, gamma_l, valid_l):
         rank = _axis_rank(data_axes, sizes)
         gids = rank * m_local + jnp.arange(m_local, dtype=jnp.int32)
+        comm = engine.MeshComm(data_axes)
 
-        # Initial local f needs the *global* Kgamma: gather X once, then
-        # accumulate over column blocks — the full (m_local x m) cross-
-        # Gram block would be hundreds of GB at m = 1M.
-        X_all = jax.lax.all_gather(X_l, data_axes, tiled=True)      # (m_pad, d)
-        g_all = jax.lax.all_gather(gamma_l, data_axes, tiled=True)  # (m_pad,)
-        blk = 2048
-        nblk = (m_pad + blk - 1) // blk
-        Xp = jnp.pad(X_all, ((0, nblk * blk - m_pad), (0, 0)))
-        gp = jnp.pad(g_all, (0, nblk * blk - m_pad))   # pad gamma=0: no-op
+        provider = engine.ShardedGram(X_l, kernel, gids=gids, rank=rank,
+                                      m_local=m_local, m_pad=m_pad,
+                                      axes=data_axes)
+        selector = engine.ShardedBlockSelector(X_l, P=P_pairs, hi=hi, lo=lo,
+                                               gids=gids, valid=valid_l,
+                                               axes=data_axes)
+        stats_fn = partial(engine.solver_stats_prev, hi=hi, lo=lo, m=m,
+                           tol=tol, comm=comm, valid=valid_l)
 
-        def fblock(i, acc):
-            xb = jax.lax.dynamic_slice_in_dim(Xp, i * blk, blk)
-            gb = jax.lax.dynamic_slice_in_dim(gp, i * blk, blk)
-            return acc + kernel.cross(X_l, xb) @ gb
-
-        f_l = jax.lax.fori_loop(0, nblk, fblock,
-                                jnp.zeros((m_local,), dtype))
-        del X_all, g_all, Xp, gp
-
-        if fused_stats:
-            rho1, rho2 = _recover_rhos(gamma_l, f_l, valid_l)
-            _, _, n_v0, mx_v0, gap0 = _fused_stats(
-                gamma_l, f_l, valid_l, rho1, rho2, jnp.asarray(False))
-        else:
-            rho1, rho2 = _recover_rhos(gamma_l, f_l, valid_l)
-            v0 = _violation(gamma_l, f_l, rho1, rho2, valid_l)
-            up0 = valid_l & (gamma_l < hi - bnd)
-            dn0 = valid_l & (gamma_l > lo + bnd)
-            gap0 = (_pmax(jnp.max(jnp.where(dn0, f_l, neg)))
-                    - _pmin(jnp.min(jnp.where(up0, f_l, pos))))
-            n_v0 = _psum(jnp.sum(v0 > tol)).astype(jnp.int32)
-            mx_v0 = _pmax(jnp.max(v0))
-        state = _DistState(gamma_l, f_l, rho1, rho2,
-                           jnp.zeros((), jnp.int32),
-                           n_v0, mx_v0, gap0,
-                           jnp.zeros((), jnp.int32))
-
-        def cond(s: _DistState):
-            return (s.it < max_outer) & (s.gap > tol) & (s.stall < patience)
-
-        def body(s: _DistState):
-            up = valid_l & (s.gamma < hi - bnd)
-            dn = valid_l & (s.gamma > lo + bnd)
-
-            # Local candidates.
-            up_val, up_i = jax.lax.top_k(jnp.where(up, -s.f, neg), PP)
-            dn_val, dn_i = jax.lax.top_k(jnp.where(dn, s.f, neg), PP)
-
-            # Pack both candidate sides into ONE matrix so selection costs
-            # a single all-gather instead of ten (ids ride as f32 —
-            # exact below 2^24 rows; the solver is latency-bound, 432 B
-            # but 16 collectives/iter before packing).
-            def pack(idx, val):
-                return jnp.concatenate(
-                    [val[:, None], gids[idx].astype(dtype)[:, None],
-                     s.gamma[idx][:, None], s.f[idx][:, None], X_l[idx]],
-                    axis=1)                          # (P, 4 + d)
-
-            cand = jnp.stack([pack(up_i, up_val), pack(dn_i, dn_val)])
-            cand_g = jax.lax.all_gather(cand, data_axes, tiled=False)
-            # (n_shards, 2, P, 4+d) -> per side (n_shards*P, 4+d)
-            cg = cand_g.transpose(1, 0, 2, 3).reshape(2, -1, cand.shape[-1])
-            uv, uid = cg[0, :, 0], cg[0, :, 1].astype(jnp.int32)
-            ug, uf, uX = cg[0, :, 2], cg[0, :, 3], cg[0, :, 4:]
-            dv, did = cg[1, :, 0], cg[1, :, 1].astype(jnp.int32)
-            dg, df_, dX = cg[1, :, 2], cg[1, :, 3], cg[1, :, 4:]
-
-            _, usel = jax.lax.top_k(uv, PP)     # global top-P grows
-            up_ids = uid[usel]
-            # Exclude grow picks from shrink candidates (disjoint pairs).
-            clash = (did[:, None] == up_ids[None, :]).any(axis=1)
-            _, dsel = jax.lax.top_k(jnp.where(clash, neg, dv), PP)
-
-            sel_ids = jnp.concatenate([uid[usel], did[dsel]])
-            g_sel0 = jnp.concatenate([ug[usel], dg[dsel]])
-            f_sel0 = jnp.concatenate([uf[usel], df_[dsel]])
-            X_sel = jnp.concatenate([uX[usel], dX[dsel]], axis=0)   # (2P, d)
-
-            Kblk = kernel.cross(X_sel, X_sel)
-            dsl = jnp.diagonal(Kblk)
-
-            def inner(k, carry):
-                g_sel, f_sel = carry
-                ib, ia = k, PP + k
-                eta = 1.0 / jnp.maximum(dsl[ia] + dsl[ib] - 2.0 * Kblk[ia, ib],
-                                        tiny)
-                t = g_sel[ia] + g_sel[ib]
-                L = jnp.maximum(t - hi, lo)
-                H = jnp.minimum(hi, t - lo)
-                gb_new = jnp.clip(g_sel[ib] + eta * (f_sel[ia] - f_sel[ib]),
-                                  L, H)
-                dgb = gb_new - g_sel[ib]
-                dgb = jnp.where(sel_ids[ia] == sel_ids[ib], 0.0, dgb)
-                g_sel = g_sel.at[ib].add(dgb).at[ia].add(-dgb)
-                f_sel = f_sel + dgb * (Kblk[:, ib] - Kblk[:, ia])
-                return g_sel, f_sel
-
-            g_sel, _ = jax.lax.fori_loop(0, PP, inner, (g_sel0, f_sel0))
-            delta = g_sel - g_sel0
-
-            # Local rank-2P f update (no communication).
-            f_new = s.f + kernel.rows(X_l, X_sel) @ delta
-            # Scatter delta into the local gamma slice.
-            loc = sel_ids - rank * m_local
-            in_range = (loc >= 0) & (loc < m_local)
-            loc_c = jnp.clip(loc, 0, m_local - 1)
-            gamma_new = s.gamma.at[loc_c].add(jnp.where(in_range, delta, 0.0))
-
-            if fused_stats:
-                recompute = (rho_every == 1) | ((s.it + 1) % rho_every == 0)
-                r1, r2, n_v, mx_v, gap_n = _fused_stats(
-                    gamma_new, f_new, valid_l, s.rho1, s.rho2, recompute)
-            else:
-                r1, r2 = _recover_rhos(gamma_new, f_new, valid_l)
-                v_new = _violation(gamma_new, f_new, r1, r2, valid_l)
-                up_n = valid_l & (gamma_new < hi - bnd)
-                dn_n = valid_l & (gamma_new > lo + bnd)
-                gap_n = (_pmax(jnp.max(jnp.where(dn_n, f_new, neg)))
-                         - _pmin(jnp.min(jnp.where(up_n, f_new, pos))))
-                n_v = _psum(jnp.sum(v_new > tol)).astype(jnp.int32)
-                mx_v = _pmax(jnp.max(v_new))
-            progressed = jnp.max(jnp.abs(delta)) > tiny * 10
-            stall = jnp.where(progressed, 0, s.stall + 1).astype(jnp.int32)
-            return _DistState(gamma_new, f_new, r1, r2, s.it + 1,
-                              n_v, mx_v, gap_n, stall)
-
-        s = jax.lax.while_loop(cond, body, state)
+        state0 = engine.init_state(provider, stats_fn, gamma_l)
+        s = engine.run(provider, selector, stats_fn, state0, hi=hi, lo=lo,
+                       tol=tol, max_iters=max_outer, patience=patience,
+                       rho_every=rho_every)
         return (s.gamma, s.f, s.rho1, s.rho2, s.it, s.n_viol, s.max_viol,
                 s.gap)
 
     data_spec = P(data_axes)
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         local_solve, mesh=mesh,
         in_specs=(P(data_axes, None), data_spec, data_spec),
         out_specs=(data_spec, data_spec, P(), P(), P(), P(), P(), P()),

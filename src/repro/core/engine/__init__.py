@@ -1,0 +1,71 @@
+"""repro.core.engine — the pluggable SMO solver engine.
+
+The paper's contribution is a single analytic 2-variable update (eq.
+35-39); everything else about training — how Gram rows are produced, which
+rows move, how convergence is measured — is policy. This package factors
+the solver into three orthogonal axes so every training scenario composes
+the same hot loop instead of re-implementing it:
+
+    SolverState ──▶ Selector.select ──▶ Selection (2P rows)
+                          │                   │
+                          │            provider.block (2P x 2P)
+                          │                   ▼
+                          │         gauss_seidel_pairs (eq. 35-39)
+                          │                   │ delta (2P,)
+                          ▼                   ▼
+                provider.scatter     provider.apply_update
+                  (gamma += )         (f += K[:, sel] @ delta —
+                          │            the Pallas fupdate kernel)
+                          └───────┬───────────┘
+                                  ▼
+                       stats_fn (rho recovery + KKT + gap,
+                        <= 2 collectives when sharded)
+
+Axes
+----
+* **GramProvider** (``gram.py``) — ``precomputed`` (materialized K),
+  ``on_the_fly`` (recompute <= 2P rows per step), ``pallas`` (the fused
+  ``kernels/fupdate`` HBM-single-pass update; interpret mode on CPU),
+  ``sharded`` (device-local slices under shard_map; selection arrives as
+  gathered row blocks so updates need zero communication).
+* **Selector** (``select.py``) — ``paper`` (eq. 56 heuristic, KKT
+  termination), ``mvp`` (Keerthi maximal-violating pair), ``block``
+  (top-P pairs per sweep; P=1 reduces to the paper's single-pair rule),
+  ``ShardedBlockSelector`` (globally-consistent top-P from per-shard
+  candidates, one all_gather of O(P d) bytes).
+* **Driver** (``driver.py``) — ONE ``jax.lax.while_loop`` with the
+  stall/patience/gap logic; ``stats.py`` holds rho recovery and the KKT /
+  duality-gap diagnostics written once, comm-parameterized (identity
+  reductions locally, two fused collectives per iteration on a mesh).
+
+Facades
+-------
+``repro.core.smo.solve``, ``repro.core.batched_smo.solve_blocked``,
+``repro.core.distributed_smo.solve_blocked_distributed`` and
+``repro.core.shrinking.solve_blocked_shrinking`` keep their public
+signatures and assemble (provider, selector, stats) for this driver;
+``repro.fit`` picks the composition from the problem size.
+"""
+from repro.core.engine.driver import (gauss_seidel_pairs, has_converged,
+                                      init_state, run)
+from repro.core.engine.gram import (BLOCK, SINGLE_PASS_MAX, OnTheFlyGram,
+                                    PallasGram, PrecomputedGram, ShardedGram,
+                                    make_provider, raw_scores_blocked)
+from repro.core.engine.select import (BlockSelector, PaperSelector,
+                                      ShardedBlockSelector, make_selector)
+from repro.core.engine.stats import (LOCAL_COMM, LocalComm, MeshComm,
+                                     recover_rhos, slab_margin,
+                                     solver_stats_fresh, solver_stats_prev,
+                                     violation)
+from repro.core.engine.types import Selection, SMOResult, SolverState
+
+__all__ = [
+    "run", "init_state", "gauss_seidel_pairs", "has_converged",
+    "make_provider", "PrecomputedGram", "OnTheFlyGram", "PallasGram",
+    "ShardedGram", "raw_scores_blocked", "SINGLE_PASS_MAX", "BLOCK",
+    "make_selector", "PaperSelector", "BlockSelector",
+    "ShardedBlockSelector",
+    "LocalComm", "MeshComm", "LOCAL_COMM", "recover_rhos", "slab_margin",
+    "violation", "solver_stats_fresh", "solver_stats_prev",
+    "Selection", "SMOResult", "SolverState",
+]

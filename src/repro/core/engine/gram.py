@@ -1,0 +1,245 @@
+"""GramProvider — the pluggable Gram-access axis of the solver engine.
+
+A provider owns the training rows and answers the four kernel-matrix
+queries the SMO hot loop needs, each against a ``Selection`` of 2P rows:
+
+* ``init_scores(gamma)``          — f = K @ gamma (once, at solve start)
+* ``block(sel)``                  — the (2P, 2P) Gram block of the pairs
+* ``apply_update(f, sel, delta)`` — f + K[:, sel] @ delta (rank-2P update,
+                                    the per-iteration hot path)
+* ``scatter(gamma, sel, delta)``  — fold the pair steps back into gamma
+
+Implementations:
+
+* ``precomputed`` — materialize K once (O(m^2) memory; small m / tests).
+* ``on_the_fly``  — recompute the needed kernel rows from X per iteration
+                    (O(m d) per step, no m^2 memory).
+* ``pallas``      — ``on_the_fly`` with the f-cache update fused into the
+                    Pallas ``kernels/fupdate`` kernel (one HBM pass over X
+                    per iteration; interpret mode on non-TPU backends), and
+                    the init pass fused the same way when m is small enough
+                    for the selected block to sit in VMEM.
+* ``sharded``     — device-local rows under ``shard_map``: updates touch
+                    only the local f/gamma slices, selections arrive as
+                    gathered (2P, d) row blocks so no global indexing is
+                    ever needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fn import KernelFn
+from repro.core.engine.types import Selection
+from repro.kernels.fupdate.ops import fupdate
+
+Array = jax.Array
+
+# Largest m for a single unblocked cross-kernel pass; above this,
+# row-blocked accumulation (raw_scores_blocked / _blocked pieces) keeps the
+# working set at O(BLOCK * m) instead of O(m^2). Shared by every caller
+# that decides "one pass vs blocked" (scores, objectives, shrinking).
+SINGLE_PASS_MAX = 4096
+BLOCK = 2048
+
+
+def raw_scores_blocked(X: Array, gamma: Array, kernel: KernelFn,
+                       block: int = BLOCK) -> Array:
+    """K @ gamma without materializing K (row-blocked above the threshold)."""
+    m = X.shape[0]
+    if m <= SINGLE_PASS_MAX:
+        return kernel.cross(X, X) @ gamma
+    nblk = (m + block - 1) // block
+    pad = nblk * block - m
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+
+    def body(i, acc):
+        xb = jax.lax.dynamic_slice_in_dim(Xp, i * block, block)
+        return jax.lax.dynamic_update_slice_in_dim(
+            acc, kernel.cross(xb, X) @ gamma, i * block, 0)
+
+    out = jax.lax.fori_loop(0, nblk, body,
+                            jnp.zeros((nblk * block,), gamma.dtype))
+    return out[:m]
+
+
+class PrecomputedGram:
+    """Materialized m x m Gram matrix: every query is a gather/matmul."""
+
+    name = "precomputed"
+
+    def __init__(self, X: Array, kernel: KernelFn):
+        self.X = X
+        self.kernel = kernel
+        self.K = kernel.gram(X)
+        self._diag = kernel.diag(X)
+
+    def diag(self) -> Array:
+        return self._diag
+
+    def column(self, i) -> Array:
+        return self.K[:, i]
+
+    def init_scores(self, gamma: Array) -> Array:
+        return self.K @ gamma
+
+    def prepare(self, sel: Selection) -> Selection:
+        # Gather the 2P columns once; block() and apply_update() both
+        # read them, halving the per-iteration gather traffic.
+        if sel.rows is None:
+            sel = sel._replace(rows=self.K[:, sel.ids])
+        return sel
+
+    def block(self, sel: Selection) -> Array:
+        if sel.rows is not None:
+            return sel.rows[sel.ids]
+        return self.K[sel.ids][:, sel.ids]
+
+    def diag_sel(self, sel: Selection) -> Array:
+        return self._diag[sel.ids]
+
+    def apply_update(self, f: Array, sel: Selection, delta: Array) -> Array:
+        rows = self.K[:, sel.ids] if sel.rows is None else sel.rows
+        return f + rows @ delta
+
+    def scatter(self, gamma: Array, sel: Selection, delta: Array) -> Array:
+        return gamma.at[sel.ids].add(delta)
+
+
+class OnTheFlyGram:
+    """Recompute the <= 2P needed kernel rows from X each iteration."""
+
+    name = "on_the_fly"
+
+    def __init__(self, X: Array, kernel: KernelFn):
+        self.X = X
+        self.kernel = kernel
+        self._diag = kernel.diag(X)
+
+    def diag(self) -> Array:
+        return self._diag
+
+    def column(self, i) -> Array:
+        return self.kernel.rows(self.X, self.X[i][None, :])[:, 0]
+
+    def init_scores(self, gamma: Array) -> Array:
+        return raw_scores_blocked(self.X, gamma, self.kernel)
+
+    def prepare(self, sel: Selection) -> Selection:
+        return sel   # rows are recomputed exactly where needed
+
+    def block(self, sel: Selection) -> Array:
+        if sel.rows is not None:
+            return sel.rows[sel.ids]
+        return self.kernel.cross(sel.X, sel.X)
+
+    def diag_sel(self, sel: Selection) -> Array:
+        return self._diag[sel.ids]
+
+    def apply_update(self, f: Array, sel: Selection, delta: Array) -> Array:
+        rows = (self.kernel.rows(self.X, sel.X) if sel.rows is None
+                else sel.rows)
+        return f + rows @ delta
+
+    def scatter(self, gamma: Array, sel: Selection, delta: Array) -> Array:
+        return gamma.at[sel.ids].add(delta)
+
+
+class PallasGram(OnTheFlyGram):
+    """on_the_fly with the rank-2P f update fused into the Pallas kernel."""
+
+    name = "pallas"
+
+    def __init__(self, X: Array, kernel: KernelFn,
+                 interpret: bool | None = None):
+        super().__init__(X, kernel)
+        self.interpret = interpret   # None -> auto (True off-TPU)
+
+    def init_scores(self, gamma: Array) -> Array:
+        if self.X.shape[0] <= BLOCK:
+            # f = 0 + k(X, X) @ gamma in one fused pass; the whole selected
+            # block must fit VMEM, so only below the blocking threshold.
+            zero = jnp.zeros((self.X.shape[0],), jnp.float32)
+            return fupdate(self.X, self.X, gamma, zero, self.kernel,
+                           interpret=self.interpret)
+        return raw_scores_blocked(self.X, gamma, self.kernel)
+
+    def apply_update(self, f: Array, sel: Selection, delta: Array) -> Array:
+        if sel.rows is not None:
+            # A selector already produced the full columns (paper rule's
+            # movability mask) — reusing them beats a second HBM pass.
+            return f + sel.rows @ delta
+        return fupdate(self.X, sel.X, delta, f, self.kernel,
+                       interpret=self.interpret)
+
+
+class ShardedGram:
+    """Device-local rows under shard_map; f/gamma are local slices.
+
+    ``gids`` are this shard's global row ids; selections carry gathered
+    (2P, d) row blocks, so the per-iteration update needs no communication
+    at all — only ``init_scores`` all-gathers (once, column-blocked).
+    """
+
+    name = "sharded"
+
+    def __init__(self, X_local: Array, kernel: KernelFn, *, gids: Array,
+                 rank: Array, m_local: int, m_pad: int, axes):
+        self.X = X_local
+        self.kernel = kernel
+        self.gids = gids
+        self.rank = rank
+        self.m_local = m_local
+        self.m_pad = m_pad
+        self.axes = tuple(axes)
+
+    def init_scores(self, gamma_local: Array) -> Array:
+        # Local f needs the *global* K gamma: gather X and gamma once, then
+        # accumulate over column blocks — the full (m_local x m) cross-Gram
+        # block would be hundreds of GB at m = 1M.
+        X_all = jax.lax.all_gather(self.X, self.axes, tiled=True)
+        g_all = jax.lax.all_gather(gamma_local, self.axes, tiled=True)
+        blk = BLOCK
+        nblk = (self.m_pad + blk - 1) // blk
+        Xp = jnp.pad(X_all, ((0, nblk * blk - self.m_pad), (0, 0)))
+        gp = jnp.pad(g_all, (0, nblk * blk - self.m_pad))  # pad 0: no-op
+
+        def fblock(i, acc):
+            xb = jax.lax.dynamic_slice_in_dim(Xp, i * blk, blk)
+            gb = jax.lax.dynamic_slice_in_dim(gp, i * blk, blk)
+            return acc + self.kernel.cross(self.X, xb) @ gb
+
+        return jax.lax.fori_loop(
+            0, nblk, fblock, jnp.zeros((self.m_local,), jnp.float32))
+
+    def prepare(self, sel: Selection) -> Selection:
+        return sel
+
+    def block(self, sel: Selection) -> Array:
+        return self.kernel.cross(sel.X, sel.X)
+
+    def diag_sel(self, sel: Selection) -> Array:
+        return self.kernel.diag(sel.X)
+
+    def apply_update(self, f: Array, sel: Selection, delta: Array) -> Array:
+        # Rank-2P update of the local rows only — no communication.
+        return f + self.kernel.rows(self.X, sel.X) @ delta
+
+    def scatter(self, gamma: Array, sel: Selection, delta: Array) -> Array:
+        loc = sel.ids - self.rank * self.m_local
+        in_range = (loc >= 0) & (loc < self.m_local)
+        loc_c = jnp.clip(loc, 0, self.m_local - 1)
+        return gamma.at[loc_c].add(jnp.where(in_range, delta, 0.0))
+
+
+def make_provider(gram_mode: str, X: Array, kernel: KernelFn,
+                  interpret: bool | None = None):
+    """Build a local provider by name ("sharded" is constructed explicitly
+    by the distributed facade — it needs the shard topology)."""
+    if gram_mode == "precomputed":
+        return PrecomputedGram(X, kernel)
+    if gram_mode == "on_the_fly":
+        return OnTheFlyGram(X, kernel)
+    if gram_mode == "pallas":
+        return PallasGram(X, kernel, interpret=interpret)
+    raise ValueError(f"unknown gram_mode {gram_mode!r}")

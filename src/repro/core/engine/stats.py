@@ -1,0 +1,245 @@
+"""Rho recovery + KKT diagnostics + MVP gap, written once for every solver.
+
+All statistics are phrased as *local masked reductions* followed by a
+cross-device combine through a ``Comm`` object:
+
+* ``LocalComm``  — single-device: the combine is the identity (free).
+* ``MeshComm``   — inside ``shard_map``: ``psum``/``pmax`` over the data
+  axes. Min-reductions ride as negated maxes so one ``pmax`` of a stacked
+  vector covers all extrema; one ``psum`` covers all sums/counts — at most
+  two collectives per call regardless of how many statistics are needed
+  (the "fused stats" optimization from hillclimb 3, EXPERIMENTS.md).
+
+Two variants of the per-iteration statistics bundle:
+
+* ``solver_stats_fresh`` — recover rho first, then measure violations
+  against the *fresh* rho (the paper recomputes each step). On a single
+  device the extra reduction pass is free, so this is the local default.
+* ``solver_stats_prev``  — measure violations against the *previous*
+  iteration's rho so rho recovery and diagnostics share one round trip
+  (2 collectives total). This is the sharded default: at pod scale each
+  small all-reduce is latency-bound, and a one-step-stale violation count
+  only delays termination by at most one iteration (convergence is gated
+  on the gap, which is always fresh).
+
+``hi``/``lo``/``m`` are the *global* box bounds and problem size — they
+must not be derived from local array shapes, which differ under sharding.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class LocalComm:
+    """Single-device combine: reductions are already global."""
+
+    axes: Tuple[str, ...] = ()
+
+    def psum(self, x: Array) -> Array:
+        return x
+
+    def pmax(self, x: Array) -> Array:
+        return x
+
+
+class MeshComm:
+    """Cross-shard combine over mesh data axes (use inside shard_map)."""
+
+    def __init__(self, axes: Sequence[str]):
+        self.axes = tuple(axes)
+
+    def psum(self, x: Array) -> Array:
+        return jax.lax.psum(x, self.axes)
+
+    def pmax(self, x: Array) -> Array:
+        return jax.lax.pmax(x, self.axes)
+
+
+LOCAL_COMM = LocalComm()
+
+
+def slab_margin(scores: Array, rho1: Array, rho2: Array) -> Array:
+    """f_bar(x) = min(s - rho1, rho2 - s) (paper eq. 56)."""
+    return jnp.minimum(scores - rho1, rho2 - scores)
+
+
+def violation(gamma: Array, scores: Array, rho1: Array, rho2: Array, *,
+              hi: float, lo: float, m: int,
+              valid: Optional[Array] = None,
+              bound_tol: float = 1e-8) -> Array:
+    """Per-sample KKT violation magnitude (>= 0), the paper's 5 cases
+    (eq. 49-53) phrased as per-plane score distances:
+
+        gamma_i = 0          -> rho1 <= s_i <= rho2
+        0 < gamma_i < hi     -> s_i = rho1
+        gamma_i = hi         -> s_i <= rho1
+        lo < gamma_i < 0     -> s_i = rho2
+        gamma_i = lo         -> s_i >= rho2
+    """
+    bt_hi = hi * bound_tol * m
+    bt_lo = -lo * bound_tol * m
+
+    at_zero = jnp.abs(gamma) <= jnp.minimum(bt_hi, bt_lo)
+    at_hi = gamma >= hi - bt_hi
+    at_lo = gamma <= lo + bt_lo
+    free_pos = (~at_zero) & (~at_hi) & (gamma > 0)
+    free_neg = (~at_zero) & (~at_lo) & (gamma < 0)
+
+    v = jnp.where(at_zero,
+                  jnp.maximum(jnp.maximum(rho1 - scores, scores - rho2), 0.0),
+                  0.0)
+    v = jnp.where(free_pos, jnp.abs(scores - rho1), v)
+    v = jnp.where(at_hi, jnp.maximum(scores - rho1, 0.0), v)
+    v = jnp.where(free_neg, jnp.abs(scores - rho2), v)
+    v = jnp.where(at_lo, jnp.maximum(rho2 - scores, 0.0), v)
+    if valid is not None:
+        v = jnp.where(valid, v, 0.0)
+    return v
+
+
+def _masked(valid: Optional[Array], mask: Array) -> Array:
+    return mask if valid is None else (valid & mask)
+
+
+def _rho_from_parts(sum1, n1, sum2, n2, r1_lo, r1_hi, r2_lo, r2_hi, big):
+    """Free-SV means with KKT-interval-midpoint fallback (eq. 20-21)."""
+    mean1 = sum1 / jnp.maximum(n1, 1.0)
+    mean2 = sum2 / jnp.maximum(n2, 1.0)
+    r1_mid = jnp.where((r1_lo > -big / 2) & (r1_hi < big / 2),
+                       0.5 * (r1_lo + r1_hi),
+                       jnp.where(r1_hi < big / 2, r1_hi, r1_lo))
+    r2_mid = jnp.where((r2_lo > -big / 2) & (r2_hi < big / 2),
+                       0.5 * (r2_lo + r2_hi),
+                       jnp.where(r2_lo > -big / 2, r2_lo, r2_hi))
+    rho1 = jnp.where(n1 > 0, mean1, r1_mid)
+    rho2 = jnp.where(n2 > 0, mean2, r2_mid)
+    return rho1, rho2
+
+
+def _rho_masks(gamma: Array, valid: Optional[Array], *, hi: float, lo: float,
+               m: int, tol: float):
+    ghi = hi * tol * m      # absolute slack scaled to the box size
+    glo = -lo * tol * m
+    return dict(
+        free_lower=_masked(valid, (gamma > ghi) & (gamma < hi - ghi)),
+        free_upper=_masked(valid, (gamma < -glo) & (gamma > lo + glo)),
+        at_hi=_masked(valid, gamma >= hi - ghi),
+        at_lo=_masked(valid, gamma <= lo + glo),
+        nonneg=_masked(valid, gamma >= -glo),   # gamma >= 0: s <= rho2 side
+        nonpos=_masked(valid, gamma <= ghi),    # gamma <= 0: s >= rho1 side
+    )
+
+
+def recover_rhos(gamma: Array, scores: Array, *, hi: float, lo: float,
+                 m: int, comm: LocalComm = LOCAL_COMM,
+                 valid: Optional[Array] = None,
+                 tol: float = 1e-6) -> Tuple[Array, Array]:
+    """rho1 / rho2 from on-margin SVs, midpoint fallback when a plane has
+    no free SV. One psum + one pmax when ``comm`` is a mesh."""
+    dtype = scores.dtype
+    big = jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
+    mk = _rho_masks(gamma, valid, hi=hi, lo=lo, m=m, tol=tol)
+
+    ps = comm.psum(jnp.stack([
+        jnp.sum(jnp.where(mk["free_lower"], scores, 0.0)),
+        jnp.sum(mk["free_lower"]).astype(dtype),
+        jnp.sum(jnp.where(mk["free_upper"], scores, 0.0)),
+        jnp.sum(mk["free_upper"]).astype(dtype),
+    ]))
+    pm = comm.pmax(jnp.stack([
+        jnp.max(jnp.where(mk["at_hi"], scores, -big)),
+        jnp.max(jnp.where(mk["nonneg"], scores, -big)),
+        -jnp.min(jnp.where(mk["nonpos"], scores, big)),
+        -jnp.min(jnp.where(mk["at_lo"], scores, big)),
+    ]))
+    return _rho_from_parts(ps[0], ps[1], ps[2], ps[3],
+                           pm[0], -pm[2], pm[1], -pm[3], big)
+
+
+def _gap_masks(gamma: Array, valid: Optional[Array], *, hi: float,
+               lo: float):
+    bnd = 1e-8 * (hi - lo)            # bound-identification slack
+    up = _masked(valid, gamma < hi - bnd)    # can increase
+    dn = _masked(valid, gamma > lo + bnd)    # can decrease
+    return up, dn
+
+
+def solver_stats_fresh(gamma: Array, f: Array, rho1_prev: Array,
+                       rho2_prev: Array, recompute_rho, *, hi: float,
+                       lo: float, m: int, tol: float,
+                       comm: LocalComm = LOCAL_COMM,
+                       valid: Optional[Array] = None):
+    """(rho1, rho2, n_viol, max_viol, gap) with violations vs FRESH rho."""
+    dtype = f.dtype
+    neg = jnp.asarray(-jnp.inf, dtype)
+    pos = jnp.asarray(jnp.inf, dtype)
+
+    rho1, rho2 = recover_rhos(gamma, f, hi=hi, lo=lo, m=m, comm=comm,
+                              valid=valid)
+    rho1 = jnp.where(recompute_rho, rho1, rho1_prev)
+    rho2 = jnp.where(recompute_rho, rho2, rho2_prev)
+
+    v = violation(gamma, f, rho1, rho2, hi=hi, lo=lo, m=m, valid=valid)
+    up, dn = _gap_masks(gamma, valid, hi=hi, lo=lo)
+    n_viol = comm.psum(jnp.sum(v > tol).astype(dtype)).astype(jnp.int32)
+    pm = comm.pmax(jnp.stack([
+        jnp.max(v),
+        jnp.max(jnp.where(dn, f, neg)),
+        -jnp.min(jnp.where(up, f, pos)),
+    ]))
+    gap = pm[1] + pm[2]
+    return rho1, rho2, n_viol, pm[0], gap
+
+
+def solver_stats_prev(gamma: Array, f: Array, rho1_prev: Array,
+                      rho2_prev: Array, recompute_rho, *, hi: float,
+                      lo: float, m: int, tol: float,
+                      comm: LocalComm = LOCAL_COMM,
+                      valid: Optional[Array] = None):
+    """(rho1, rho2, n_viol, max_viol, gap) in exactly 2 collectives.
+
+    psum vector: [sum_free_lower_f, n_free_lower, sum_free_upper_f,
+                  n_free_upper, n_violators]
+    pmax vector: [r1_lo, r2_lo, -r1_hi, -r2_hi, max_viol,
+                  max_f_down, -min_f_up]       (mins as negated maxes)
+
+    Violations are measured against ``rho*_prev`` so the rho sums and the
+    violation stats share one round trip.
+    """
+    dtype = f.dtype
+    big = jnp.asarray(jnp.finfo(dtype).max / 4, dtype)
+    neg = jnp.asarray(-jnp.inf, dtype)
+    pos = jnp.asarray(jnp.inf, dtype)
+
+    mk = _rho_masks(gamma, valid, hi=hi, lo=lo, m=m, tol=1e-6)
+    up, dn = _gap_masks(gamma, valid, hi=hi, lo=lo)
+    v = violation(gamma, f, rho1_prev, rho2_prev, hi=hi, lo=lo, m=m,
+                  valid=valid)
+
+    ps = comm.psum(jnp.stack([
+        jnp.sum(jnp.where(mk["free_lower"], f, 0.0)),
+        jnp.sum(mk["free_lower"]).astype(dtype),
+        jnp.sum(jnp.where(mk["free_upper"], f, 0.0)),
+        jnp.sum(mk["free_upper"]).astype(dtype),
+        jnp.sum(v > tol).astype(dtype),
+    ]))
+    pm = comm.pmax(jnp.stack([
+        jnp.max(jnp.where(mk["at_hi"], f, -big)),
+        jnp.max(jnp.where(mk["nonneg"], f, -big)),
+        -jnp.min(jnp.where(mk["nonpos"], f, big)),
+        -jnp.min(jnp.where(mk["at_lo"], f, big)),
+        jnp.max(v),
+        jnp.max(jnp.where(dn, f, neg)),
+        -jnp.min(jnp.where(up, f, pos)),
+    ]))
+
+    rho1, rho2 = _rho_from_parts(ps[0], ps[1], ps[2], ps[3],
+                                 pm[0], -pm[2], pm[1], -pm[3], big)
+    rho1 = jnp.where(recompute_rho, rho1, rho1_prev)
+    rho2 = jnp.where(recompute_rho, rho2, rho2_prev)
+    return rho1, rho2, ps[4].astype(jnp.int32), pm[4], pm[5] + pm[6]

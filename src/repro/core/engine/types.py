@@ -1,0 +1,59 @@
+"""Shared state/selection pytrees for the pluggable solver engine."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+
+Array = jax.Array
+
+
+class SolverState(NamedTuple):
+    """The one carried state for every SMO variant (a while_loop pytree).
+
+    For the sharded provider ``gamma``/``f`` are the device-local slices;
+    everything else is replicated scalars.
+    """
+
+    gamma: Array      # (m,) dual coefficients (local slice when sharded)
+    f: Array          # (m,) raw-score cache K @ gamma
+    rho1: Array       # lower-plane offset (eq. 20)
+    rho2: Array       # upper-plane offset (eq. 21)
+    it: Array         # int32 iteration counter
+    n_viol: Array     # int32 current KKT violator count
+    max_viol: Array   # float max KKT violation
+    gap: Array        # float MVP duality gap: max f|down - min f|up
+    stall: Array      # int32 consecutive no-progress steps
+
+
+class Selection(NamedTuple):
+    """A working set of 2P rows: the grow half [0:P], the shrink half [P:2P].
+
+    ``ids`` are *global* row indices (== local indices on one device).
+    ``gamma``/``f``/``X`` are the gathered per-row values, so providers can
+    evaluate kernel rows without re-indexing sharded arrays.
+    """
+
+    ids: Array        # (2P,) int32 row ids
+    gamma: Array      # (2P,) current dual values
+    f: Array          # (2P,) current scores
+    X: Array          # (2P, d) selected data rows
+    # Optional (m, 2P) kernel columns a selector already computed while
+    # choosing the working set (the paper selector needs full rows for its
+    # movability mask); providers reuse them instead of recomputing.
+    rows: Optional[Array] = None
+
+    @property
+    def n_pairs(self) -> int:
+        return self.ids.shape[0] // 2
+
+
+class SMOResult(NamedTuple):
+    """Public result type shared by every solver facade."""
+
+    model: "object"   # OCSSVMModel (kept loose to avoid an import cycle)
+    iters: Array
+    n_viol: Array
+    max_viol: Array
+    gap: Array
+    converged: Array

@@ -13,20 +13,22 @@ conditions, but numerically uniform):
 ``violation(...)`` returns a non-negative per-sample violation magnitude;
 the solver stops when at most one sample violates beyond ``tol`` (the
 paper's Algorithm 1 termination), or when the max violation is below tol.
+
+The implementation lives in ``repro.core.engine.stats`` (shared with the
+sharded solver, which needs explicit global bounds + validity masks); this
+module keeps the spec-based convenience view.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine.stats import slab_margin, violation as _violation
 from repro.core.ocssvm import SlabSpec
 
 Array = jax.Array
 
-
-def slab_margin(scores: Array, rho1: Array, rho2: Array) -> Array:
-    """f_bar(x) = min(s - rho1, rho2 - s) (paper eq. 56)."""
-    return jnp.minimum(scores - rho1, rho2 - scores)
+__all__ = ["slab_margin", "violation", "n_violators", "converged"]
 
 
 def violation(
@@ -39,29 +41,8 @@ def violation(
 ) -> Array:
     """Per-sample KKT violation magnitude (>= 0)."""
     m = gamma.shape[0]
-    hi = spec.upper(m)
-    lo = spec.lower(m)
-    bt_hi = hi * bound_tol * m
-    bt_lo = -lo * bound_tol * m
-
-    at_zero = jnp.abs(gamma) <= jnp.minimum(bt_hi, bt_lo)
-    at_hi = gamma >= hi - bt_hi
-    at_lo = gamma <= lo + bt_lo
-    free_pos = (~at_zero) & (~at_hi) & (gamma > 0)
-    free_neg = (~at_zero) & (~at_lo) & (gamma < 0)
-
-    v_zero = jnp.maximum(jnp.maximum(rho1 - scores, scores - rho2), 0.0)
-    v_free_pos = jnp.abs(scores - rho1)
-    v_at_hi = jnp.maximum(scores - rho1, 0.0)
-    v_free_neg = jnp.abs(scores - rho2)
-    v_at_lo = jnp.maximum(rho2 - scores, 0.0)
-
-    v = jnp.where(at_zero, v_zero, 0.0)
-    v = jnp.where(free_pos, v_free_pos, v)
-    v = jnp.where(at_hi, v_at_hi, v)
-    v = jnp.where(free_neg, v_free_neg, v)
-    v = jnp.where(at_lo, v_at_lo, v)
-    return v
+    return _violation(gamma, scores, rho1, rho2, hi=spec.upper(m),
+                      lo=spec.lower(m), m=m, bound_tol=bound_tol)
 
 
 def n_violators(v: Array, tol: float) -> Array:

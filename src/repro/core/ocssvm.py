@@ -17,6 +17,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import stats as _stats
+from repro.core.engine.gram import SINGLE_PASS_MAX
 from repro.core.kernel_fn import KernelFn
 
 Array = jax.Array
@@ -75,6 +77,32 @@ class OCSSVMModel(NamedTuple):
         return jnp.where(self.decision_function(Xq) >= 0, 1, -1)
 
 
+def concrete_spec(spec: SlabSpec) -> SlabSpec:
+    """Pull the spec's (hyper-)parameters to host python floats.
+
+    The jitted solver facades take the spec as a *static* argument (the
+    Pallas provider must specialize on concrete kernel parameters), so it
+    has to be hashable: 0-d jax arrays — e.g. a spec recovered from a
+    fitted model's ``res.model.spec`` — are converted; tracers cannot be
+    (call the solver outside jit, or with a spec built from floats).
+    """
+
+    def _f(v, name):
+        if isinstance(v, jax.core.Tracer):
+            raise TypeError(
+                f"SlabSpec.{name} is a traced value; the solver facades "
+                "take the spec as a static (hashable) argument — build it "
+                "from concrete floats or call outside jit.")
+        return float(v)
+
+    kernel = dataclasses.replace(
+        spec.kernel, gamma=_f(spec.kernel.gamma, "kernel.gamma"),
+        coef0=_f(spec.kernel.coef0, "kernel.coef0"))
+    return dataclasses.replace(
+        spec, nu1=_f(spec.nu1, "nu1"), nu2=_f(spec.nu2, "nu2"),
+        eps=_f(spec.eps, "eps"), kernel=kernel)
+
+
 def feasible_init(m: int, spec: SlabSpec, dtype=jnp.float32) -> Array:
     """A strictly feasible gamma: water-fill ``1 - eps`` into the box.
 
@@ -116,47 +144,13 @@ def recover_rhos(
     When a plane has no free SV (all at bound), fall back to the KKT
     interval midpoint: rho1 in [max_{gamma=hi} s, min_{gamma<=0} s],
     rho2 in [max_{gamma>=0} s, min_{gamma=lo} s].
+
+    This is the spec-based view of the one implementation in
+    ``repro.core.engine.stats`` (which also serves the sharded solver).
     """
     m = gamma.shape[0]
-    hi = spec.upper(m)
-    lo = spec.lower(m)
-    ghi = hi * tol * m  # absolute slack scaled to the box size
-    glo = -lo * tol * m
-
-    free_lower = (gamma > ghi) & (gamma < hi - ghi)
-    free_upper = (gamma < -glo) & (gamma > lo + glo)
-
-    def _masked_mean(mask, values):
-        n = jnp.sum(mask)
-        return jnp.sum(jnp.where(mask, values, 0.0)) / jnp.maximum(n, 1), n
-
-    mean1, n1 = _masked_mean(free_lower, scores)
-    mean2, n2 = _masked_mean(free_upper, scores)
-
-    big = jnp.asarray(jnp.finfo(scores.dtype).max / 4, scores.dtype)
-    at_hi = gamma >= hi - ghi
-    at_lo = gamma <= lo + glo
-    nonneg = gamma >= -glo   # gamma >= 0 (within tol): s <= rho2 region
-    nonpos = gamma <= ghi    # gamma <= 0 (within tol): s >= rho1 region
-
-    # rho1 interval: scores of capped-at-hi points sit above rho1;
-    # scores of gamma<=0 points sit below... (s >= rho1 for gamma<=0).
-    r1_lo = jnp.max(jnp.where(at_hi, scores, -big))
-    r1_hi = jnp.min(jnp.where(nonpos, scores, big))
-    r1_mid = jnp.where(
-        (r1_lo > -big / 2) & (r1_hi < big / 2), 0.5 * (r1_lo + r1_hi),
-        jnp.where(r1_hi < big / 2, r1_hi, r1_lo))
-
-    # rho2 interval: gamma>=0 points have s <= rho2; capped-at-lo have s >= rho2.
-    r2_lo = jnp.max(jnp.where(nonneg, scores, -big))
-    r2_hi = jnp.min(jnp.where(at_lo, scores, big))
-    r2_mid = jnp.where(
-        (r2_lo > -big / 2) & (r2_hi < big / 2), 0.5 * (r2_lo + r2_hi),
-        jnp.where(r2_lo > -big / 2, r2_lo, r2_hi))
-
-    rho1 = jnp.where(n1 > 0, mean1, r1_mid)
-    rho2 = jnp.where(n2 > 0, mean2, r2_mid)
-    return rho1, rho2
+    return _stats.recover_rhos(gamma, scores, hi=spec.upper(m),
+                               lo=spec.lower(m), m=m, tol=tol)
 
 
 def with_quantile_offsets(model: "OCSSVMModel") -> "OCSSVMModel":
@@ -188,8 +182,15 @@ def dual_objective(gamma: Array, K: Array) -> Array:
 
 
 def dual_objective_matfree(gamma: Array, X: Array, kernel: KernelFn) -> Array:
-    """Objective without materializing K — one cross-kernel pass."""
-    return 0.5 * gamma @ (kernel.cross(X, X) @ gamma) if X.shape[0] <= 4096 else _blocked_obj(gamma, X, kernel)
+    """Objective without materializing K.
+
+    Below the engine's single-pass threshold (the same one
+    ``raw_scores_blocked`` uses) one cross-kernel pass suffices; above it
+    the quadratic form is accumulated over row blocks.
+    """
+    if X.shape[0] <= SINGLE_PASS_MAX:
+        return 0.5 * gamma @ (kernel.cross(X, X) @ gamma)
+    return _blocked_obj(gamma, X, kernel)
 
 
 def _blocked_obj(gamma: Array, X: Array, kernel: KernelFn, block: int = 2048) -> Array:

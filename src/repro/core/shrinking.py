@@ -4,7 +4,8 @@ Classic shrinking skips bound-pinned coordinates inside the solver loop.
 Under jit every vector op is full-m regardless of masks, so masking saves
 nothing — instead this driver PHYSICALLY repacks the active set:
 
-1. run the blocked solver a bounded number of iterations on the full set,
+1. run the engine-backed blocked solver a bounded number of iterations on
+   the full set,
 2. freeze coordinates at a bound whose score keeps them there with margin
    (they cannot be part of any violating pair),
 3. gather the active coordinates (size rounded up to a bucket to bound
@@ -19,6 +20,10 @@ Per-iteration work in step 3 is O(m_active * d) instead of O(m * d) —
 near convergence m_active is the support-vector count, typically a small
 fraction of m. The reached optimum is the full-problem optimum (the final
 full-set KKT check gates termination); tests assert objective parity.
+
+Every inner solve routes through the shared engine (``solve_blocked`` is
+an engine facade), so ``gram_mode="pallas"`` drives the fused Pallas
+f-update inside the shrinking rounds too.
 """
 from __future__ import annotations
 
@@ -31,11 +36,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batched_smo import solve_blocked
-from repro.core.kkt import violation
-from repro.core.ocssvm import OCSSVMModel, SlabSpec, feasible_init, recover_rhos
-from repro.core.smo import SMOResult, raw_scores_blocked
+from repro.core.engine.gram import SINGLE_PASS_MAX, raw_scores_blocked
+from repro.core.engine.stats import violation as _violation
+from repro.core.engine.types import SMOResult
+from repro.core.ocssvm import OCSSVMModel, SlabSpec, recover_rhos
 
 Array = jax.Array
+
+__all__ = ["solve_blocked_shrinking"]
 
 
 def _bucket(n: int, m: int) -> int:
@@ -51,20 +59,33 @@ def solve_blocked_shrinking(
     spec: SlabSpec,
     *,
     P: int = 8,
+    gram_mode: str = "on_the_fly",
     tol: float = 1e-4,
     warm_iters: int = 200,
     max_rounds: int = 8,
     round_iters: int = 50_000,
     margin: float = 2.0,
+    max_outer: Optional[int] = None,
+    patience: int = 20,
+    gamma0: Optional[Array] = None,
 ) -> SMOResult:
+    """max_outer caps the per-round iteration budget (alias of
+    round_iters, so the blocked solvers' signature works here too);
+    gamma0 warm-starts the phase-1 full-set solve."""
+    if max_outer is not None:
+        round_iters = min(round_iters, max_outer)
     m, d = X.shape
     Xf = jnp.asarray(X, jnp.float32)
     kernel = spec.kernel
     hi, lo = spec.upper(m), spec.lower(m)
     bnd = 1e-8 * (hi - lo)
 
+    def _solve(Xs, sp, **kw):
+        return solve_blocked(Xs, sp, P=P, gram_mode=gram_mode, tol=tol,
+                             patience=patience, **kw)
+
     # Phase 1: bounded full-set warm solve.
-    res = solve_blocked(Xf, spec, P=P, tol=tol, max_outer=warm_iters)
+    res = _solve(Xf, spec, max_outer=warm_iters, gamma0=gamma0)
     gamma = res.model.gamma
     if bool(res.converged):
         return res
@@ -73,7 +94,7 @@ def solve_blocked_shrinking(
     for _ in range(max_rounds):
         f = raw_scores_blocked(Xf, gamma, kernel)
         rho1, rho2 = recover_rhos(gamma, f, spec)
-        v = violation(gamma, f, rho1, rho2, spec)
+        v = _violation(gamma, f, rho1, rho2, hi=hi, lo=lo, m=m)
         if int(jnp.sum(v > tol)) <= 1:
             break
 
@@ -93,8 +114,7 @@ def solve_blocked_shrinking(
         n_active = int(active.sum())
         if n_active >= int(0.9 * m) or n_active < 4 * P:
             # shrinking not profitable: finish on the full set
-            res = solve_blocked(Xf, spec, P=P, tol=tol,
-                                max_outer=round_iters, gamma0=gamma)
+            res = _solve(Xf, spec, max_outer=round_iters, gamma0=gamma)
             gamma = res.model.gamma
             total_iters += int(res.iters)
             break
@@ -109,21 +129,21 @@ def solve_blocked_shrinking(
         g_act = gamma[idx_j]
         # Frozen contribution to the active rows' scores:
         f_act_full = f[idx_j]
-        k_act = kernel.cross(X_act, X_act) @ g_act if n_b <= 4096 else \
-            raw_scores_blocked(X_act, g_act, kernel)
+        k_act = (kernel.cross(X_act, X_act) @ g_act
+                 if n_b <= SINGLE_PASS_MAX
+                 else raw_scores_blocked(X_act, g_act, kernel))
         f_offset = f_act_full - k_act
 
         sub_spec = dataclasses.replace(
             spec, nu1=spec.nu1 * m / n_b, nu2=spec.nu2 * m / n_b)
-        sub = solve_blocked(X_act, sub_spec, P=P, tol=tol,
-                            max_outer=round_iters, gamma0=g_act,
-                            f_offset=f_offset)
+        sub = _solve(X_act, sub_spec, max_outer=round_iters, gamma0=g_act,
+                     f_offset=f_offset)
         gamma = gamma.at[idx_j].set(sub.model.gamma)
         total_iters += int(sub.iters)
 
     f = raw_scores_blocked(Xf, gamma, kernel)
     rho1, rho2 = recover_rhos(gamma, f, spec)
-    v = violation(gamma, f, rho1, rho2, spec)
+    v = _violation(gamma, f, rho1, rho2, hi=hi, lo=lo, m=m)
     up_ok = gamma < hi - bnd
     dn_ok = gamma > lo + bnd
     gap = (jnp.max(jnp.where(dn_ok, f, -jnp.inf))

@@ -1,88 +1,46 @@
 """Paper-faithful SMO for the One-Class Slab SVM (Algorithm 1).
 
-One violating pair per iteration, updated analytically (eq. 35-39), with the
-f-cache maintained by a rank-2 update and rho1/rho2 re-estimated from
-on-margin SVs every step (eq. 20-21).
+Thin facade over ``repro.core.engine``: one violating pair per iteration,
+updated analytically (eq. 35-39), with the f-cache maintained by a rank-2
+update and rho1/rho2 re-estimated from on-margin SVs every step
+(eq. 20-21).
 
 Two working-set selections:
 
 * ``selection="paper"`` — the paper's heuristic (eq. 56):
   b = argmax |f_bar(x_b)| among KKT violators, a = argmax
-  |f_bar(x_b) - f_bar(x_a)|.  We additionally mask partners ``a`` whose
-  clipped step would be zero (the paper's rule implicitly assumes the pair
-  can move; without the mask the iteration deadlocks on bound-blocked
-  pairs — Platt's original resolves this with fallback example sweeps).
-* ``selection="mvp"`` — Keerthi-style maximal-violating-pair on the reduced
-  dual: b = argmin{f_i : gamma_i < hi}, a = argmax{f_j : gamma_j > lo};
-  converged when f_a - f_b <= tol.  Needs no rho estimate, so it is immune
-  to early rho oscillation; used as the fast default at scale.
+  |f_bar(x_b) - f_bar(x_a)|, with partners whose clipped step would be
+  zero masked out (see ``engine.select.PaperSelector``).
+* ``selection="mvp"`` — Keerthi-style maximal-violating-pair on the
+  reduced dual; converged when the duality gap <= tol. Needs no rho
+  estimate for selection, so it is immune to early rho oscillation.
 
 Both reach the same optimum (tests assert objective parity with the QP
-baseline). The whole solve is a single ``jax.lax.while_loop`` — the carried
-state is a pytree, so a solve can be checkpointed/restarted mid-optimization.
+baseline). The whole solve is a single ``jax.lax.while_loop``.
 
-Gram strategies: ``precomputed`` (materialize K once; small m) or
-``on_the_fly`` (recompute the <=3 needed kernel rows per iteration from X;
-O(m d) per step, no m^2 memory — the Pallas ``fupdate`` path on TPU).
+Gram strategies: ``precomputed`` (materialize K once; small m),
+``on_the_fly`` (recompute the needed kernel rows per iteration; O(m d)
+per step, no m^2 memory), or ``pallas`` (the fused fupdate kernel).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernel_fn import KernelFn
-from repro.core.kkt import slab_margin, violation
-from repro.core.ocssvm import (OCSSVMModel, SlabSpec, feasible_init,
-                               recover_rhos)
+from repro.core import engine
+from repro.core.engine.gram import raw_scores_blocked  # re-export (compat)
+from repro.core.engine.types import SMOResult
+from repro.core.ocssvm import (OCSSVMModel, SlabSpec, concrete_spec,
+                               feasible_init)
 
 Array = jax.Array
 
-
-class SMOState(NamedTuple):
-    gamma: Array      # (m,)
-    f: Array          # (m,) raw scores K @ gamma
-    rho1: Array
-    rho2: Array
-    it: Array         # int32 iteration counter
-    n_viol: Array     # int32 current KKT violator count
-    max_viol: Array   # float max violation
-    gap: Array        # float MVP duality gap  max f|down - min f|up
-    stall: Array      # int32 consecutive no-progress steps
+__all__ = ["solve", "SMOResult", "raw_scores_blocked"]
 
 
-class SMOResult(NamedTuple):
-    model: OCSSVMModel
-    iters: Array
-    n_viol: Array
-    max_viol: Array
-    gap: Array
-    converged: Array
-
-
-def raw_scores_blocked(X: Array, gamma: Array, kernel: KernelFn,
-                       block: int = 2048) -> Array:
-    """K @ gamma without materializing K (row-blocked)."""
-    m = X.shape[0]
-    if m <= block:
-        return kernel.cross(X, X) @ gamma
-    nblk = (m + block - 1) // block
-    pad = nblk * block - m
-    Xp = jnp.pad(X, ((0, pad), (0, 0)))
-
-    def body(i, acc):
-        xb = jax.lax.dynamic_slice_in_dim(Xp, i * block, block)
-        return jax.lax.dynamic_update_slice_in_dim(
-            acc, kernel.cross(xb, X) @ gamma, i * block, 0)
-
-    out = jax.lax.fori_loop(0, nblk, body, jnp.zeros((nblk * block,), gamma.dtype))
-    return out[:m]
-
-
-@partial(jax.jit, static_argnames=("gram_mode", "selection", "tol",
-                                   "max_iters", "patience"))
 def solve(
     X: Array,
     spec: SlabSpec,
@@ -94,106 +52,59 @@ def solve(
     patience: int = 20,
     gamma0: Optional[Array] = None,
 ) -> SMOResult:
-    """Run Algorithm 1 until <=1 KKT violator (paper) / gap<=tol (mvp)."""
+    """Run Algorithm 1 until <=1 KKT violator (paper) / gap<=tol (mvp).
+
+    The spec normally stays a traced pytree (one compile covers a whole
+    hyper-parameter sweep); only the Pallas provider must specialize on
+    concrete kernel parameters, so gram_mode="pallas" hashes a
+    concretized spec as a static argument instead.
+    """
+    if gram_mode == "pallas":
+        return _solve_static(X, concrete_spec(spec), gram_mode=gram_mode,
+                             selection=selection, tol=tol,
+                             max_iters=max_iters, patience=patience,
+                             gamma0=gamma0)
+    return _solve_traced(X, spec, gram_mode=gram_mode, selection=selection,
+                         tol=tol, max_iters=max_iters, patience=patience,
+                         gamma0=gamma0)
+
+
+def _solve_impl(
+    X: Array,
+    spec: SlabSpec,
+    *,
+    gram_mode: str,
+    selection: str,
+    tol: float,
+    max_iters: int,
+    patience: int,
+    gamma0: Optional[Array],
+) -> SMOResult:
     m, _ = X.shape
-    kernel = spec.kernel
-    dtype = jnp.float32
-    Xf = X.astype(dtype)
+    Xf = X.astype(jnp.float32)
+    hi, lo = spec.upper(m), spec.lower(m)
 
-    gamma = feasible_init(m, spec, dtype) if gamma0 is None else gamma0.astype(dtype)
+    gamma = (feasible_init(m, spec, jnp.float32) if gamma0 is None
+             else gamma0.astype(jnp.float32))
 
-    K = kernel.gram(Xf) if gram_mode == "precomputed" else None
-    diagK = kernel.diag(Xf)
-    f = (K @ gamma) if K is not None else raw_scores_blocked(Xf, gamma, kernel)
-    rho1, rho2 = recover_rhos(gamma, f, spec)
+    provider = engine.make_provider(gram_mode, Xf, spec.kernel)
+    selector = engine.make_selector(selection, provider, P=1, hi=hi, lo=lo,
+                                    m=m, tol=tol)
+    stats_fn = partial(engine.solver_stats_fresh, hi=hi, lo=lo, m=m, tol=tol)
 
-    hi = spec.upper(m)
-    lo = spec.lower(m)
-    bnd = 1e-8 * (hi - lo)          # bound-identification slack
-    tiny = jnp.asarray(1e-12, dtype)
-    neg = jnp.asarray(-jnp.inf, dtype)
-    pos = jnp.asarray(jnp.inf, dtype)
+    state0 = engine.init_state(provider, stats_fn, gamma)
+    s = engine.run(provider, selector, stats_fn, state0, hi=hi, lo=lo,
+                   tol=tol, max_iters=max_iters, patience=patience)
 
-    def krow(idx):
-        if K is not None:
-            return K[:, idx]
-        return kernel.rows(Xf, Xf[idx][None, :])[:, 0]
-
-    def diagnostics(gamma, f, rho1, rho2):
-        v = violation(gamma, f, rho1, rho2, spec)
-        up = gamma < hi - bnd       # can increase
-        dn = gamma > lo + bnd       # can decrease
-        gap = jnp.max(jnp.where(dn, f, neg)) - jnp.min(jnp.where(up, f, pos))
-        return v, gap
-
-    v0, gap0 = diagnostics(gamma, f, rho1, rho2)
-    state = SMOState(gamma, f, rho1, rho2,
-                     jnp.zeros((), jnp.int32),
-                     jnp.sum(v0 > tol).astype(jnp.int32),
-                     jnp.max(v0), gap0, jnp.zeros((), jnp.int32))
-
-    def not_done(s: SMOState):
-        if selection == "mvp":
-            unconverged = s.gap > tol
-        else:
-            # Paper: "until at most one variable doesn't satisfy KKT";
-            # also accept a uniformly-small violation (same optimum).
-            unconverged = (s.n_viol > 1) & (s.max_viol > tol)
-        return (s.it < max_iters) & unconverged & (s.stall < patience)
-
-    def select_paper(s: SMOState):
-        v, _ = diagnostics(s.gamma, s.f, s.rho1, s.rho2)
-        fbar = slab_margin(s.f, s.rho1, s.rho2)
-        b = jnp.argmax(jnp.where(v > tol, jnp.abs(fbar), neg))
-        # Candidate step size against every partner a (needs row b).
-        kb = krow(b)
-        eta_den = jnp.maximum(diagK + diagK[b] - 2.0 * kb, tiny)
-        t = s.gamma + s.gamma[b]
-        L = jnp.maximum(t - hi, lo)
-        H = jnp.minimum(hi, t - lo)
-        gb_t = s.gamma[b] + (s.f - s.f[b]) / eta_den
-        movable = jnp.abs(jnp.clip(gb_t, L, H) - s.gamma[b]) > tiny * 10
-        gap_score = jnp.where(movable, jnp.abs(fbar[b] - fbar), neg)
-        gap_score = gap_score.at[b].set(neg)
-        a = jnp.argmax(gap_score)
-        return a, b, kb
-
-    def select_mvp(s: SMOState):
-        up = s.gamma < hi - bnd
-        dn = s.gamma > lo + bnd
-        b = jnp.argmin(jnp.where(up, s.f, pos))   # grows: smallest score
-        a = jnp.argmax(jnp.where(dn, s.f, neg))   # shrinks: largest score
-        return a, b, krow(b)
-
-    def body(s: SMOState):
-        a, b, kb = select_paper(s) if selection == "paper" else select_mvp(s)
-        ka = krow(a)
-
-        eta = 1.0 / jnp.maximum(diagK[a] + diagK[b] - 2.0 * kb[a], tiny)
-        ga, gb = s.gamma[a], s.gamma[b]
-        t = ga + gb
-        L = jnp.maximum(t - hi, lo)
-        H = jnp.minimum(hi, t - lo)
-        gb_new = jnp.clip(gb + eta * (s.f[a] - s.f[b]), L, H)   # eq. 35/38/39
-        ga_new = t - gb_new                                      # eq. 37
-        dgb = gb_new - gb
-
-        gamma_new = s.gamma.at[a].set(ga_new).at[b].set(gb_new)
-        f_new = s.f + dgb * (kb - ka)
-        r1, r2 = recover_rhos(gamma_new, f_new, spec)
-
-        v_new, gap_new = diagnostics(gamma_new, f_new, r1, r2)
-        progressed = jnp.abs(dgb) > tiny * 10
-        stall = jnp.where(progressed, 0, s.stall + 1).astype(jnp.int32)
-        return SMOState(gamma_new, f_new, r1, r2, s.it + 1,
-                        jnp.sum(v_new > tol).astype(jnp.int32),
-                        jnp.max(v_new), gap_new, stall)
-
-    s = jax.lax.while_loop(not_done, body, state)
-    model = OCSSVMModel(gamma=s.gamma, rho1=s.rho1, rho2=s.rho2, X=Xf, spec=spec)
-    if selection == "mvp":
-        conv = s.gap <= tol
-    else:
-        conv = (s.n_viol <= 1) | (s.max_viol <= tol)
+    model = OCSSVMModel(gamma=s.gamma, rho1=s.rho1, rho2=s.rho2, X=Xf,
+                        spec=spec)
     return SMOResult(model=model, iters=s.it, n_viol=s.n_viol,
-                     max_viol=s.max_viol, gap=s.gap, converged=conv)
+                     max_viol=s.max_viol, gap=s.gap,
+                     converged=engine.has_converged(s, selector.criterion,
+                                                    tol))
+
+
+_SOLVE_STATIC = ("gram_mode", "selection", "tol", "max_iters", "patience")
+_solve_traced = partial(jax.jit, static_argnames=_SOLVE_STATIC)(_solve_impl)
+_solve_static = partial(jax.jit,
+                        static_argnames=_SOLVE_STATIC + ("spec",))(_solve_impl)

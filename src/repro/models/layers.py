@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.utils.compat import shard_map
+
 Array = jax.Array
 
 
@@ -96,8 +98,8 @@ def mlp_forward_tp(params: dict, x: Array, mlp_type: str, ctx) -> Array:
     if gated:
         args.append(params["w3"])
         specs.append(w1spec)
-    return jax.shard_map(local_fn, mesh=mesh, in_specs=tuple(specs),
-                         out_specs=xspec, check_vma=False)(*args)
+    return shard_map(local_fn, mesh=mesh, in_specs=tuple(specs),
+                     out_specs=xspec, check_vma=False)(*args)
 
 
 def mlp_init(key: Array, d_model: int, d_ff: int, mlp_type: str,

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import dense_init
+from repro.utils.compat import shard_map
 
 Array = jax.Array
 
@@ -296,7 +297,7 @@ def _moe_forward_a2a(params: dict, x: Array, ctx, *, n_experts: int,
     if has_w3:
         w_in.append(params["w3"])
         w_specs.append(wspec)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         local_fn, mesh=mesh,
         in_specs=(xspec, P(None, None), *w_specs),
         out_specs=(xspec, P()),
@@ -369,7 +370,7 @@ def _moe_forward_sharded(params: dict, x: Array, ctx, *, n_experts: int,
     if has_w3:
         w_in.append(params["w3"])
         w_specs.append(wspec)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         local_fn, mesh=mesh,
         in_specs=(xspec, P(None, None), *w_specs),
         out_specs=(xspec, P()),

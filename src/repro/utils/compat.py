@@ -1,0 +1,23 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+``jax.shard_map`` (with its ``check_vma`` kwarg) only exists in newer jax;
+on 0.4.x the same functionality lives at
+``jax.experimental.shard_map.shard_map`` with the kwarg spelled
+``check_rep``. Call sites import ``shard_map`` from here and always use
+the new-style ``check_vma`` spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})

@@ -163,6 +163,7 @@ def test_compressed_gradient_allreduce():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.optim.compression import init_error_state, psum_compressed
+        from repro.utils.compat import shard_map
         mesh = jax.make_mesh((4,), ("data",))
         g = {"w": jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 7.0}
         err = init_error_state(g)
@@ -170,7 +171,7 @@ def test_compressed_gradient_allreduce():
         def f(g, err):
             return psum_compressed(g, err, ("data",))
 
-        out, new_err = jax.shard_map(
+        out, new_err = shard_map(
             f, mesh=mesh, in_specs=(P("data", None), P("data", None)),
             out_specs=(P("data", None), P("data", None)),
             check_vma=False)(g, err)

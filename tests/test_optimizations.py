@@ -114,7 +114,42 @@ def test_a2a_moe_matches_global():
     assert float(line) < 5e-4
 
 
-def test_fused_stats_solver_matches_unfused():
+def test_fused_stats_match_fresh_reference():
+    """The 2-collective packed statistics bundle (solver_stats_prev, the
+    sharded hot path) must agree with the straightforward fresh-rho
+    implementation on arbitrary mid-optimization states — same rho,
+    violator count, max violation, and MVP gap — when fed the same rho."""
+    import numpy as np
+    from repro.core import SlabSpec, engine, rbf
+
+    spec = SlabSpec(nu1=0.4, nu2=0.08, eps=0.5, kernel=rbf(gamma=0.7))
+    m = 160
+    hi, lo = spec.upper(m), spec.lower(m)
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        # arbitrary in-box gamma (some coordinates pinned to a bound) and
+        # an unrelated score vector — a mid-optimization snapshot
+        gamma = jnp.asarray(rng.uniform(lo, hi, m).astype(np.float32))
+        pin = rng.random(m)
+        gamma = jnp.where(jnp.asarray(pin < 0.2), hi, gamma)
+        gamma = jnp.where(jnp.asarray(pin > 0.85), lo, gamma)
+        f = jnp.asarray(rng.standard_normal(m).astype(np.float32)) * 0.1
+        kw = dict(hi=hi, lo=lo, m=m, tol=1e-4)
+        zero = jnp.zeros(())
+        r1, r2, nv, mv, gap = engine.solver_stats_fresh(
+            gamma, f, zero, zero, True, **kw)
+        r1p, r2p, nvp, mvp_, gapp = engine.solver_stats_prev(
+            gamma, f, r1, r2, True, **kw)
+        assert float(r1) == pytest.approx(float(r1p), abs=1e-6)
+        assert float(r2) == pytest.approx(float(r2p), abs=1e-6)
+        assert int(nv) == int(nvp)
+        assert float(mv) == pytest.approx(float(mvp_), abs=1e-6)
+        assert float(gap) == pytest.approx(float(gapp), abs=1e-6)
+
+
+def test_distributed_rho_every_reaches_same_optimum():
+    """rho_every>1 (stale-rho iterations through the fused mesh stats)
+    must still land on the rho_every=1 optimum."""
     line = _run("""
         import jax, jax.numpy as jnp
         from repro.core import SlabSpec, rbf, dual_objective
@@ -125,9 +160,9 @@ def test_fused_stats_solver_matches_unfused():
         K = spec.kernel.gram(X.astype(jnp.float32))
         mesh = jax.make_mesh((4,), ("data",))
         a = solve_blocked_distributed(X, spec, mesh, data_axes=("data",),
-                                      P_pairs=4, tol=1e-4, fused_stats=True)
+                                      P_pairs=4, tol=1e-4, rho_every=1)
         b = solve_blocked_distributed(X, spec, mesh, data_axes=("data",),
-                                      P_pairs=4, tol=1e-4, fused_stats=False)
+                                      P_pairs=4, tol=1e-4, rho_every=4)
         oa = float(dual_objective(a.model.gamma, K))
         ob = float(dual_objective(b.model.gamma, K))
         print(abs(oa - ob))

@@ -8,7 +8,8 @@ from __future__ import annotations
 import sys
 
 from benchmarks import (blocked_smo_scaling, fig_slab_recovery,
-                        kernel_microbench, roofline_report, smo_pod_scale,
+                        kernel_microbench, roofline_report,
+                        serving_latency, smo_pod_scale,
                         table1_training_time)
 
 
@@ -20,12 +21,14 @@ def main() -> None:
             print(f"table1,m={r['m']},paper_smo={r['paper_smo_s']*1e6:.0f}us,"
                   f"mcc={r['paper_smo_mcc']:.3f}")
     else:
-        table1_training_time.main()
+        table1_training_time.main([])
     print("# === paper Figs 1-2: slab recovery ===")
     fig_slab_recovery.main()
     print("# === beyond-paper: blocked-SMO scaling ===")
     if not quick:
         blocked_smo_scaling.main()
+    print("# === serving: warm cache + bucketed Pallas scoring ===")
+    serving_latency.main(["--reduced"] if quick else [])
     print("# === Pallas kernel microbench (interpret mode) ===")
     kernel_microbench.main()
     print("# === the paper's solver at pod scale (m=1M, 256/512 chips) ===")

@@ -1,0 +1,95 @@
+"""Serving benchmark: cold path vs warm cache + cached bucket executables.
+
+Cold = first ``repro.serve`` on a fresh cache (fit + SV compaction + tile
+packing) plus the first score per bucket (compiles the executable).
+Warm = the same request stream again: cache hit + cached executables.
+Acceptance (ISSUE 2): warm beats cold by >= 5x on the 2000-row toy.
+
+    PYTHONPATH=src python benchmarks/serving_latency.py [--reduced]
+        [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+import repro
+from repro.core import SlabSpec, rbf
+from repro.data import make_toy
+from repro.serve import ModelCache, ScoringService
+
+BATCHES = (64, 256, 1024)
+
+
+def _stream(sm, batches):
+    """One scoring pass per batch size; returns per-bucket seconds."""
+    svc = ScoringService(sm.scorer())
+    out = {}
+    for i, n in enumerate(batches):
+        q = np.asarray(make_toy(jax.random.PRNGKey(100 + i), n)[0])
+        t0 = time.perf_counter()
+        jax.block_until_ready(svc.score(q))
+        out[n] = time.perf_counter() - t0
+    return out
+
+
+def run(m: int = 2000, batches=BATCHES, tol: float = 1e-3) -> dict:
+    spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
+    X, _ = make_toy(jax.random.PRNGKey(0), m)
+    cache = ModelCache()
+
+    t0 = time.perf_counter()
+    sm = repro.serve(X, spec, cache=cache, tol=tol, P=16)
+    cold_first = _stream(sm, batches)
+    cold_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sm2 = repro.serve(X, spec, cache=cache, tol=tol, P=16)
+    warm_first = _stream(sm2, batches)
+    warm_s = time.perf_counter() - t0
+
+    assert sm2 is sm and cache.hits == 1, "warm pass must hit the cache"
+    return {
+        "m": m, "n_sv": sm.n_sv, "tol": tol,
+        "cold_s": cold_s, "warm_s": warm_s,
+        "speedup": cold_s / warm_s,
+        "cold_per_bucket_s": {str(k): v for k, v in cold_first.items()},
+        "warm_per_bucket_s": {str(k): v for k, v in warm_first.items()},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="small problem for CI smoke (m=500, 2 buckets)")
+    ap.add_argument("--json", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    if args.reduced:
+        res = run(m=500, batches=(64, 256))
+    else:
+        res = run()
+
+    print(f"serving,m={res['m']},n_sv={res['n_sv']},"
+          f"cold={res['cold_s']*1e3:.0f}ms,warm={res['warm_s']*1e3:.1f}ms,"
+          f"speedup={res['speedup']:.0f}x")
+    for b in res["cold_per_bucket_s"]:
+        print(f"serving_bucket,b={b},"
+              f"cold={res['cold_per_bucket_s'][b]*1e3:.1f}ms,"
+              f"warm={res['warm_per_bucket_s'][b]*1e3:.1f}ms")
+    if res["speedup"] < 5:
+        print(f"WARNING: warm speedup {res['speedup']:.1f}x "
+              "below the 5x acceptance bar")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(res, fh, indent=2)
+        print(f"wrote {args.json}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

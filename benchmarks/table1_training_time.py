@@ -8,10 +8,11 @@ paper compares against. Paper's reported times (their hardware):
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 import repro
 from repro.configs.ocssvm_paper import PAPER_SPEC, TABLE1_SIZES
@@ -57,13 +58,25 @@ def run(sizes=TABLE1_SIZES):
     return rows
 
 
-def main():
-    for r in run():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="CI smoke: only the two smallest sizes")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write the rows to this path as JSON")
+    args = ap.parse_args(argv)
+
+    rows = run(sizes=(500, 1000) if args.reduced else TABLE1_SIZES)
+    for r in rows:
         print(f"table1,m={r['m']},paper_smo={r['paper_smo_s']*1e6:.0f}us"
               f"(iters={r['paper_smo_iters']}),mcc={r['paper_smo_mcc']:.3f},"
               f"mvp={r['mvp_smo_s']*1e6:.0f}us,"
               f"blocked={r['blocked_s']*1e6:.0f}us,"
               f"qp={r['qp_fista_s']*1e6:.0f}us")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(rows, fh, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

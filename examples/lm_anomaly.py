@@ -12,13 +12,11 @@ the OCSSVM slab head as a first-class framework feature.
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
 from repro.configs.base import LayerSpec
 from repro.core import SlabSpec, fit_head, rbf
-from repro.models.layers import rms_norm
 from repro.models.transformer import forward, init_params
 from repro.train.train_step import init_train_state, make_train_step
 

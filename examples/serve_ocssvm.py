@@ -1,7 +1,9 @@
 """Batched OCSSVM scoring service — the serving half of the paper system.
 
-Fits a slab once, then serves batched scoring requests through the Pallas
-``decision`` kernel (the TPU hot path; interpret mode on CPU).
+Everything goes through the ``repro.serve`` subsystem: the warm-model
+cache fits on miss and packs the support set for the decision kernel
+once; the scorer pads every batch to a bucket so each size hits a cached
+executable; the service micro-batches queued requests into one launch.
 
     PYTHONPATH=src python examples/serve_ocssvm.py
 """
@@ -12,39 +14,53 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro
-from repro.core import SlabSpec, rbf, with_quantile_offsets
+from repro.core import SlabSpec, rbf
 from repro.data import make_toy
-from repro.kernels import decision
+from repro.serve import ScoringService
 
 
 def main():
     spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
     X, _ = make_toy(jax.random.PRNGKey(0), 2000)
-    res = repro.fit(X, spec, P=16, tol=1e-3)   # auto provider+selector
-    model = with_quantile_offsets(res.model)  # beyond-paper: usable slab
-    print(f"model: {int(jnp.sum(jnp.abs(model.gamma) > 1e-7))} SVs, "
-          f"slab [{float(model.rho1):.4f}, {float(model.rho2):.4f}]")
 
-    # batched scoring via the Pallas decision kernel
-    def serve(queries):
-        return decision(queries, model.X, model.gamma, model.rho1,
-                        model.rho2, spec.kernel)
+    t0 = time.perf_counter()
+    sm = repro.serve(X, spec, offsets="quantile", P=16, tol=1e-3)
+    cold = time.perf_counter() - t0
+    print(f"model: {sm.n_sv} SVs (packed {tuple(sm.t_pad.shape)}), "
+          f"slab [{float(sm.rho1):.4f}, {float(sm.rho2):.4f}], "
+          f"cold fit+pack {cold*1e3:.0f} ms")
 
+    t0 = time.perf_counter()
+    repro.serve(X, spec, offsets="quantile", P=16, tol=1e-3)  # cache hit
+    print(f"warm re-serve: {(time.perf_counter() - t0)*1e3:.2f} ms "
+          f"(cache {repro.serve.default_cache().hits} hits / "
+          f"{repro.serve.default_cache().misses} misses)")
+
+    svc = ScoringService(sm.scorer())
     for batch_size in (64, 256, 1024):
         q, yq = make_toy(jax.random.PRNGKey(1), batch_size)
-        scores = serve(q)
-        jax.block_until_ready(scores)
-        t0 = time.perf_counter()
-        scores = serve(q)
-        jax.block_until_ready(scores)
-        dt = time.perf_counter() - t0
+        svc.score(np.asarray(q))               # warm the bucket executable
+        scores = svc.score(np.asarray(q))
+        s = svc.stats[batch_size]
         acc = float((jnp.where(scores >= 0, 1, -1) == yq).mean())
-        print(f"batch={batch_size:5d}: {dt*1e3:7.2f} ms "
-              f"({dt/batch_size*1e6:6.1f} us/query) acc={acc:.3f}")
+        print(f"batch={batch_size:5d}: {s.last_s*1e3:7.2f} ms "
+              f"({s.last_s/batch_size*1e6:6.1f} us/query) acc={acc:.3f}")
+
+    # micro-batching: many small requests coalesce into one launch
+    reqs = [np.asarray(make_toy(jax.random.PRNGKey(10 + i), 48)[0])
+            for i in range(8)]
+    for q in reqs:
+        svc.submit(q)
+    launches = svc.flush()
+    print(f"micro-batch: {len(reqs)} x 48-row requests -> "
+          f"{launches} launch(es)")
+    for line in svc.stats_lines():
+        print("  " + line)
+
     # cross-check against the model's jnp reference path
     q, _ = make_toy(jax.random.PRNGKey(2), 128)
-    np.testing.assert_allclose(np.asarray(serve(q)),
-                               np.asarray(model.decision_function(q)),
+    np.testing.assert_allclose(np.asarray(sm.score(np.asarray(q))),
+                               np.asarray(sm.model.decision_function(q)),
                                rtol=2e-4, atol=2e-4)
     print("pallas == jnp reference: OK")
 

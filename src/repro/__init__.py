@@ -1,8 +1,10 @@
 """repro — One-Class Slab SVM reproduction as a JAX/Pallas system.
 
-``repro.fit(X, spec)`` is the front door: it composes the solver engine
-(``repro.core.engine``) for the problem size and hardware. The import is
-lazy so lightweight subpackage imports stay cheap.
+``repro.fit(X, spec)`` is the training front door: it composes the solver
+engine (``repro.core.engine``) for the problem size and hardware.
+``repro.serve(X, spec)`` is the serving front door: warm-model cache +
+batched Pallas scoring (``repro.serve``). Imports are lazy so lightweight
+subpackage imports stay cheap.
 """
 
 
@@ -10,7 +12,13 @@ def __getattr__(name):
     if name == "fit":
         from repro.api import fit
         return fit
+    if name == "serve":
+        # Import the subpackage (a callable module): ``repro.serve(X, s)``
+        # and ``repro.serve.ModelCache`` resolve to the same object no
+        # matter which is touched first.
+        import repro.serve as serve_pkg
+        return serve_pkg
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-__all__ = ["fit"]
+__all__ = ["fit", "serve"]

@@ -35,7 +35,13 @@ _SHRINKING_MIN_M = 8192
 STRATEGIES = ("auto", "paper", "mvp", "blocked", "shrinking", "distributed")
 
 
-def _auto_gram_mode(m: int) -> str:
+def _auto_gram_mode(m: int, interpret: Optional[bool] = None) -> str:
+    if interpret is not None:
+        # An explicit interpret override is a request to exercise the
+        # Pallas provider deterministically (CPU CI forces interpret=True;
+        # TPU perf runs force interpret=False) — don't second-guess it
+        # from the problem size or whatever backend jax resolved.
+        return "pallas"
     if m <= SINGLE_PASS_MAX // 2:
         return "precomputed"
     if jax.default_backend() == "tpu":
@@ -49,6 +55,7 @@ def fit(
     *,
     strategy: str = "auto",
     gram_mode: Optional[str] = None,
+    interpret: Optional[bool] = None,
     P: int = 8,
     tol: float = 1e-4,
     mesh=None,
@@ -59,8 +66,11 @@ def fit(
 
     strategy: "auto" (size/hardware heuristic), "paper" / "mvp" (the
     sequential Algorithm 1 selectors), "blocked", "shrinking", or
-    "distributed" (requires ``mesh``). Extra kwargs flow to the chosen
-    solver (max_iters/max_outer, patience, gamma0, ...).
+    "distributed" (requires ``mesh``). interpret: force Pallas
+    interpret mode on (True; CPU CI) or off (False; TPU) for the
+    ``gram_mode="pallas"`` provider instead of auto-detecting the
+    backend. Extra kwargs flow to the chosen solver
+    (max_iters/max_outer, patience, gamma0, ...).
     """
     if spec is None:
         spec = SlabSpec()
@@ -89,20 +99,36 @@ def fit(
     if strategy == "distributed":
         if mesh is None:
             raise ValueError("strategy='distributed' needs a mesh")
-        if gram_mode is not None:
+        if gram_mode is not None or interpret is not None:
             raise ValueError(
-                "gram_mode is not configurable for the distributed "
-                "strategy: the sharded provider owns Gram access "
-                "(Pallas-in-shard is a ROADMAP open item)")
+                "gram_mode/interpret are not configurable for the "
+                "distributed strategy: the sharded provider owns Gram "
+                "access (Pallas-in-shard is a ROADMAP open item)")
         return solve_blocked_distributed(X, spec, mesh,
                                          data_axes=data_axes, P_pairs=P,
                                          tol=tol, **kwargs)
 
-    gm = gram_mode if gram_mode is not None else _auto_gram_mode(m)
+    gm = gram_mode if gram_mode is not None else _auto_gram_mode(m, interpret)
     if strategy in ("paper", "mvp"):
-        return solve_smo(X, spec, selection=strategy, gram_mode=gm, tol=tol,
-                         **kwargs)
+        return solve_smo(X, spec, selection=strategy, gram_mode=gm,
+                         interpret=interpret, tol=tol, **kwargs)
     if strategy == "shrinking":
-        return solve_blocked_shrinking(X, spec, P=P, gram_mode=gm, tol=tol,
+        return solve_blocked_shrinking(X, spec, P=P, gram_mode=gm,
+                                       interpret=interpret, tol=tol,
                                        **kwargs)
-    return solve_blocked(X, spec, P=P, gram_mode=gm, tol=tol, **kwargs)
+    return solve_blocked(X, spec, P=P, gram_mode=gm, interpret=interpret,
+                         tol=tol, **kwargs)
+
+
+def serve(X: Array, spec: Optional[SlabSpec] = None, **kwargs):
+    """Train-then-serve: a warm ``ServingModel`` ready to ``score(q)``.
+
+    The serving-side counterpart of ``fit``: hits the process-wide
+    warm-model cache (fit + SV compaction + tile packing happen once per
+    (spec, data) key) and returns a ``repro.serve.ServingModel`` whose
+    ``score`` runs batched through the Pallas decision kernel. kwargs
+    flow to ``repro.serve.ModelCache.get_or_fit`` (cache=, offsets=,
+    sv_threshold=, tn=) and on to ``fit`` (strategy, interpret, tol, ...).
+    """
+    from repro.serve.model_cache import serve as _serve
+    return _serve(X, spec, **kwargs)

@@ -10,7 +10,7 @@ covering the 512 -> 256 -> 128 chip scenarios (node loss, pool shrink).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding

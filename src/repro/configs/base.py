@@ -11,7 +11,7 @@ Mixer kinds: "full" (causal GQA), "swa" (sliding-window GQA), "mamba"
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -6,8 +6,8 @@ All solvers are facades over the pluggable engine in
 """
 from repro.core import engine
 from repro.core.kernel_fn import KernelFn, linear, poly, rbf
-from repro.core.ocssvm import (OCSSVMModel, SlabSpec, dual_objective,
-                               feasible_init, recover_rhos,
+from repro.core.ocssvm import (OCSSVMModel, SlabSpec, compact_support,
+                               dual_objective, feasible_init, recover_rhos,
                                with_quantile_offsets)
 from repro.core.kkt import slab_margin, violation, n_violators, converged
 from repro.core.smo import SMOResult, solve as solve_smo
@@ -21,9 +21,11 @@ from repro.core.distributed_smo import solve_blocked_distributed
 __all__ = [
     "engine",
     "KernelFn", "linear", "rbf", "poly",
-    "OCSSVMModel", "SlabSpec", "dual_objective", "feasible_init",
+    "OCSSVMModel", "SlabSpec", "compact_support", "dual_objective",
+    "feasible_init",
     "recover_rhos", "slab_margin", "violation", "n_violators", "converged",
     "SMOResult", "solve_smo", "solve_blocked", "solve_blocked_shrinking",
     "solve_blocked_distributed", "with_quantile_offsets",
     "QPResult", "project_box_hyperplane", "solve_qp", "mcc",
+    "FittedHead", "fit_head", "pool_features",
 ]

@@ -41,6 +41,7 @@ def solve_blocked(
     *,
     P: int = 8,
     gram_mode: str = "on_the_fly",
+    interpret: Optional[bool] = None,
     tol: float = 1e-4,
     max_outer: int = 50_000,
     patience: int = 20,
@@ -54,9 +55,11 @@ def solve_blocked(
 
     The spec stays a traced pytree except under gram_mode="pallas", where
     the Pallas kernel must specialize on concrete kernel parameters (the
-    concretized spec becomes a static jit argument)."""
-    kw = dict(P=P, gram_mode=gram_mode, tol=tol, max_outer=max_outer,
-              patience=patience, gamma0=gamma0, f_offset=f_offset)
+    concretized spec becomes a static jit argument). ``interpret``
+    force-overrides the Pallas provider's interpret-mode autodetection."""
+    kw = dict(P=P, gram_mode=gram_mode, interpret=interpret, tol=tol,
+              max_outer=max_outer, patience=patience, gamma0=gamma0,
+              f_offset=f_offset)
     if gram_mode == "pallas":
         return _solve_static(X, concrete_spec(spec), **kw)
     return _solve_traced(X, spec, **kw)
@@ -68,6 +71,7 @@ def _solve_impl(
     *,
     P: int,
     gram_mode: str,
+    interpret: Optional[bool],
     tol: float,
     max_outer: int,
     patience: int,
@@ -81,7 +85,8 @@ def _solve_impl(
     gamma = (feasible_init(m, spec, jnp.float32) if gamma0 is None
              else gamma0.astype(jnp.float32))
 
-    provider = engine.make_provider(gram_mode, Xf, spec.kernel)
+    provider = engine.make_provider(gram_mode, Xf, spec.kernel,
+                                    interpret=interpret)
     selector = engine.BlockSelector(provider, P=P, hi=hi, lo=lo)
     stats_fn = partial(engine.solver_stats_fresh, hi=hi, lo=lo, m=m, tol=tol)
 
@@ -96,7 +101,8 @@ def _solve_impl(
                      converged=s.gap <= tol)
 
 
-_SOLVE_STATIC = ("P", "gram_mode", "tol", "max_outer", "patience")
+_SOLVE_STATIC = ("P", "gram_mode", "interpret", "tol", "max_outer",
+                 "patience")
 _solve_traced = partial(jax.jit, static_argnames=_SOLVE_STATIC)(_solve_impl)
 _solve_static = partial(jax.jit,
                         static_argnames=_SOLVE_STATIC + ("spec",))(_solve_impl)

@@ -8,8 +8,7 @@ whitening transform (mean/scale fit on the training features).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

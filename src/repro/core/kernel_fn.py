@@ -12,9 +12,6 @@ Everything is pure jnp and jit-friendly; the kernel choice is static.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -12,10 +12,11 @@ The paper's key reduction (eq. 29-32): the dual depends only on
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.engine import stats as _stats
 from repro.core.engine.gram import SINGLE_PASS_MAX
@@ -174,6 +175,27 @@ def with_quantile_offsets(model: "OCSSVMModel") -> "OCSSVMModel":
     rho1 = jnp.quantile(s, model.spec.nu1)
     rho2 = jnp.quantile(s, 1.0 - model.spec.nu2)
     return model._replace(rho1=rho1, rho2=rho2)
+
+
+def compact_support(model: "OCSSVMModel",
+                    threshold: float = 1e-7) -> "OCSSVMModel":
+    """Drop non-support rows: keep only |gamma_i| > threshold.
+
+    Serving never needs the full training set — scoring cost is
+    O(n_sv * d) per query, and after convergence most coordinates sit at
+    exactly 0 or below ``threshold``. The returned model's
+    ``decision_function`` differs from the full model's by at most
+    ``sum(|dropped gamma|) * max_k |k|`` (each dropped coefficient is
+    <= threshold), which is the bound ``docs/serving.md`` documents.
+
+    Host-side (concrete arrays): compaction changes shapes, so it cannot
+    live under jit; it runs once per fitted model in the serving cache.
+    """
+    g = np.asarray(model.gamma)
+    idx = np.nonzero(np.abs(g) > threshold)[0]
+    idx_j = jnp.asarray(idx, jnp.int32)
+    return model._replace(gamma=jnp.asarray(model.gamma)[idx_j],
+                          X=jnp.asarray(model.X)[idx_j])
 
 
 def dual_objective(gamma: Array, K: Array) -> Array:

@@ -17,12 +17,11 @@ scaling gap the paper's Table 1 demonstrates.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernel_fn import KernelFn
 from repro.core.ocssvm import SlabSpec, feasible_init
 
 Array = jax.Array

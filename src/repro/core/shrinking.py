@@ -60,6 +60,7 @@ def solve_blocked_shrinking(
     *,
     P: int = 8,
     gram_mode: str = "on_the_fly",
+    interpret: Optional[bool] = None,
     tol: float = 1e-4,
     warm_iters: int = 200,
     max_rounds: int = 8,
@@ -81,7 +82,8 @@ def solve_blocked_shrinking(
     bnd = 1e-8 * (hi - lo)
 
     def _solve(Xs, sp, **kw):
-        return solve_blocked(Xs, sp, P=P, gram_mode=gram_mode, tol=tol,
+        return solve_blocked(Xs, sp, P=P, gram_mode=gram_mode,
+                             interpret=interpret, tol=tol,
                              patience=patience, **kw)
 
     # Phase 1: bounded full-set warm solve.

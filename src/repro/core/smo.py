@@ -47,6 +47,7 @@ def solve(
     *,
     gram_mode: str = "precomputed",
     selection: str = "paper",
+    interpret: Optional[bool] = None,
     tol: float = 1e-4,
     max_iters: int = 200_000,
     patience: int = 20,
@@ -57,16 +58,15 @@ def solve(
     The spec normally stays a traced pytree (one compile covers a whole
     hyper-parameter sweep); only the Pallas provider must specialize on
     concrete kernel parameters, so gram_mode="pallas" hashes a
-    concretized spec as a static argument instead.
+    concretized spec as a static argument instead. ``interpret``
+    force-overrides the Pallas provider's interpret-mode autodetection
+    (None -> interpret off-TPU).
     """
+    kw = dict(gram_mode=gram_mode, selection=selection, interpret=interpret,
+              tol=tol, max_iters=max_iters, patience=patience, gamma0=gamma0)
     if gram_mode == "pallas":
-        return _solve_static(X, concrete_spec(spec), gram_mode=gram_mode,
-                             selection=selection, tol=tol,
-                             max_iters=max_iters, patience=patience,
-                             gamma0=gamma0)
-    return _solve_traced(X, spec, gram_mode=gram_mode, selection=selection,
-                         tol=tol, max_iters=max_iters, patience=patience,
-                         gamma0=gamma0)
+        return _solve_static(X, concrete_spec(spec), **kw)
+    return _solve_traced(X, spec, **kw)
 
 
 def _solve_impl(
@@ -75,6 +75,7 @@ def _solve_impl(
     *,
     gram_mode: str,
     selection: str,
+    interpret: Optional[bool],
     tol: float,
     max_iters: int,
     patience: int,
@@ -87,7 +88,8 @@ def _solve_impl(
     gamma = (feasible_init(m, spec, jnp.float32) if gamma0 is None
              else gamma0.astype(jnp.float32))
 
-    provider = engine.make_provider(gram_mode, Xf, spec.kernel)
+    provider = engine.make_provider(gram_mode, Xf, spec.kernel,
+                                    interpret=interpret)
     selector = engine.make_selector(selection, provider, P=1, hi=hi, lo=lo,
                                     m=m, tol=tol)
     stats_fn = partial(engine.solver_stats_fresh, hi=hi, lo=lo, m=m, tol=tol)
@@ -104,7 +106,8 @@ def _solve_impl(
                                                     tol))
 
 
-_SOLVE_STATIC = ("gram_mode", "selection", "tol", "max_iters", "patience")
+_SOLVE_STATIC = ("gram_mode", "selection", "interpret", "tol", "max_iters",
+                 "patience")
 _solve_traced = partial(jax.jit, static_argnames=_SOLVE_STATIC)(_solve_impl)
 _solve_static = partial(jax.jit,
                         static_argnames=_SOLVE_STATIC + ("spec",))(_solve_impl)

@@ -10,7 +10,6 @@ are next-token shifted with a final IGNORE at the boundary.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp

@@ -35,3 +35,38 @@ def decision(q, t, gamma_vec, rho1, rho2, kernel: KernelFn, *,
                           degree=kernel.degree, tm=tm, tn=tn,
                           interpret=interpret)
     return out[:nq, 0]
+
+
+@partial(jax.jit, static_argnames=("kernel", "tm", "tn", "interpret"))
+def decision_packed(q_pad, t_pad, gamma_pad, t_norms, rho1, rho2,
+                    kernel: KernelFn, *, tm: int = 256, tn: int = 512,
+                    interpret: bool | None = None):
+    """Decision values against a support set already packed to the tile grid.
+
+    The serving fast path: ``t_pad`` (M_pad, d_pad), ``gamma_pad``
+    (M_pad, 1) and ``t_norms`` (M_pad, 1) were padded/precomputed once at
+    model-compaction time (gamma is zero on padding rows, so they
+    contribute nothing), and the query block arrives pre-padded to a
+    bucket shape — the per-request work is one ||q||^2 reduction plus the
+    kernel launch. Returns all ``q_pad.shape[0]`` values; the caller
+    slices its live rows.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    if q_pad.shape[0] % tm or t_pad.shape[0] % tn or q_pad.shape[1] % 128:
+        raise ValueError(
+            f"decision_packed needs pre-padded operands: got q "
+            f"{q_pad.shape} (rows % tm={tm}, features % 128) and t "
+            f"{t_pad.shape} (rows % tn={tn})")
+    if q_pad.shape[1] != t_pad.shape[1]:
+        raise ValueError(f"feature-dim mismatch: q {q_pad.shape} vs "
+                         f"t {t_pad.shape}")
+    q_pad = q_pad.astype(jnp.float32)
+    qn = jnp.sum(q_pad * q_pad, axis=-1, keepdims=True)
+    rho = jnp.stack([jnp.asarray(rho1, jnp.float32),
+                     jnp.asarray(rho2, jnp.float32)])[None, :]
+    out = decision_pallas(q_pad, t_pad, gamma_pad, rho, qn, t_norms,
+                          kind=kernel.name, gamma=kernel.gamma,
+                          coef0=kernel.coef0, degree=kernel.degree,
+                          tm=tm, tn=tn, interpret=interpret)
+    return out[:, 0]

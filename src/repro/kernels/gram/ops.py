@@ -7,6 +7,7 @@ to dot products and norms, and padded outputs are discarded by the slice.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -26,6 +27,17 @@ def _pad_to(a, mult, axis):
 
 
 def _auto_interpret() -> bool:
+    """interpret-mode default: REPRO_INTERPRET env override, else backend.
+
+    CI sets REPRO_INTERPRET=1 so the kernels-interpret job is deterministic
+    regardless of which backend jax resolves. Read at trace time: flip the
+    variable before the first kernel call of the process.
+    """
+    env = os.environ.get("REPRO_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "on"):
+        return True
+    if env in ("0", "false", "off"):
+        return False
     return jax.default_backend() != "tpu"
 
 

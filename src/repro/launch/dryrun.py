@@ -9,11 +9,10 @@ import time          # noqa: E402
 import traceback     # noqa: E402
 
 import jax           # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import ARCHS, SHAPES, get_arch, long_context_capable  # noqa: E402
 from repro.launch.mesh import make_production_mesh                        # noqa: E402
-from repro.launch.specs import (batch_sds_and_shardings, cache_sds,        # noqa: E402
+from repro.launch.specs import (batch_sds_and_shardings,                   # noqa: E402
                                 decode_specs, param_shardings, params_sds,
                                 train_state_sds, train_state_shardings)
 from repro.sharding.specs import make_constrain                            # noqa: E402

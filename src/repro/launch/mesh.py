@@ -9,7 +9,7 @@ all-reduces cross the inter-pod links.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.launch.mesh import make_production_mesh, make_test_mesh
-from repro.launch.specs import decode_specs, param_shardings
 from repro.models.transformer import init_cache, init_params
 from repro.sharding.specs import make_constrain
 from repro.train.serve_step import make_decode, make_prefill

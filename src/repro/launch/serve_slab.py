@@ -1,0 +1,112 @@
+"""Slab scoring-service launcher: the OCSSVM serving subsystem as a CLI.
+
+Fits (or cache-hits) a slab on the toy problem, then drives a synthetic
+request stream through the micro-batching ``ScoringService`` and prints
+per-bucket latency/throughput counters.
+
+    PYTHONPATH=src python -m repro.launch.serve_slab --m 2000 \
+        --requests 64 --min-batch 8 --max-batch 512
+
+    # pod-scale sharded scoring (forced host devices for a dry run):
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve_slab --sharded-devices 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+import repro
+from repro.core import SlabSpec, linear, poly, rbf
+from repro.data import make_toy
+from repro.launch.mesh import make_test_mesh
+from repro.serve import ScoringService, run_request_stream
+
+
+def _kernel(args):
+    if args.kernel == "linear":
+        return linear()
+    if args.kernel == "poly":
+        return poly(gamma=args.gamma, coef0=1.0, degree=2)
+    return rbf(gamma=args.gamma)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--m", type=int, default=2000, help="training rows")
+    ap.add_argument("--kernel", choices=("linear", "rbf", "poly"),
+                    default="rbf")
+    ap.add_argument("--gamma", type=float, default=0.5)
+    ap.add_argument("--nu1", type=float, default=0.5)
+    ap.add_argument("--nu2", type=float, default=0.05)
+    ap.add_argument("--eps", type=float, default=0.5)
+    ap.add_argument("--tol", type=float, default=1e-3)
+    ap.add_argument("--requests", type=int, default=32,
+                    help="synthetic requests in the stream")
+    ap.add_argument("--min-batch", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=512)
+    ap.add_argument("--coalesce", type=int, default=8,
+                    help="requests submitted per flush window")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sharded-devices", type=int, default=0,
+                    help="score through shard_map over this many devices "
+                         "(needs >= that many jax devices)")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write the stats to this path as JSON")
+    args = ap.parse_args(argv)
+
+    spec = SlabSpec(nu1=args.nu1, nu2=args.nu2, eps=args.eps,
+                    kernel=_kernel(args))
+    X, _ = make_toy(jax.random.PRNGKey(args.seed), args.m)
+
+    t0 = time.perf_counter()
+    sm = repro.serve(X, spec, tol=args.tol, P=16)
+    cold_s = time.perf_counter() - t0
+    cache = repro.serve.default_cache()
+    print(f"serve: m={args.m} -> {sm.n_sv} SVs packed "
+          f"{tuple(sm.t_pad.shape)} in {cold_s*1e3:.0f} ms "
+          f"(cache {cache.hits} hits / {cache.misses} misses)")
+
+    if args.sharded_devices:
+        mesh = make_test_mesh((args.sharded_devices,), ("data",))
+        scorer = sm.scorer(mesh=mesh)
+        print(f"sharded scoring over {args.sharded_devices} devices "
+              f"(axis 'data')")
+    else:
+        scorer = sm.scorer()
+        scorer.warmup()
+
+    rng = np.random.default_rng(args.seed)
+    sizes = rng.integers(args.min_batch, args.max_batch + 1,
+                         size=args.requests)
+    requests = [np.asarray(make_toy(jax.random.PRNGKey(1000 + i), int(n))[0])
+                for i, n in enumerate(sizes)]
+
+    svc = ScoringService(scorer)
+    t0 = time.perf_counter()
+    scores = run_request_stream(svc, requests, coalesce=args.coalesce)
+    stream_s = time.perf_counter() - t0
+    total_q = int(sizes.sum())
+    print(f"stream: {args.requests} requests / {total_q} queries in "
+          f"{stream_s*1e3:.0f} ms ({total_q/stream_s:.0f} q/s)")
+    for line in svc.stats_lines():
+        print("  " + line)
+
+    inside = sum(int((np.asarray(s) >= 0).sum()) for s in scores)
+    print(f"decisions: {inside}/{total_q} inside the slab")
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"m": args.m, "n_sv": sm.n_sv, "cold_s": cold_s,
+                       "stream_s": stream_s, "requests": args.requests,
+                       "queries": total_q,
+                       "buckets": svc.stats_dict()}, fh, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ the matching NamedShardings derived from the sharding rules.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,8 +70,8 @@ def opt_state_shardings(cfg: ArchConfig, mesh: Mesh, *, fsdp: bool = True,
 
         specs = jax.tree.map(densify, specs, psds)
     rep = NamedSharding(mesh, P())
-    as_shard = lambda tree: jax.tree.map(
-        lambda s: NamedSharding(mesh, s), tree)
+    def as_shard(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
     if cfg.optimizer == "adafactor":
         vr = jax.tree.map(lambda s, p: NamedSharding(
             mesh, _drop_axis(s, 1) if len(p.shape) >= 2 else s),

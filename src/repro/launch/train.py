@@ -10,7 +10,6 @@ end (mesh (1,1), fault-tolerant loop, checkpoints, metrics).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 

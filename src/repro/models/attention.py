@@ -29,7 +29,8 @@ from repro.models.layers import apply_rope, dense_init
 
 Array = jax.Array
 NEG_INF = -1e30
-_id = lambda x, kind: x
+def _id(x, kind):
+    return x
 
 
 class KVCache(NamedTuple):

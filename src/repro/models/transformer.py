@@ -16,18 +16,18 @@ embeddings that are prepended to the text embeddings.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ArchConfig, LayerSpec
-from repro.models.attention import (KVCache, attn_init, attention_forward,
+from repro.models.attention import (attn_init, attention_forward,
                                     make_kv_cache)
 from repro.models.layers import (dense_init, embed_init, mlp_forward,
                                  mlp_forward_tp, mlp_init, rms_norm)
-from repro.models.mamba import (MambaState, make_mamba_state, mamba_forward,
+from repro.models.mamba import (make_mamba_state, mamba_forward,
                                 mamba_init)
 from repro.models.moe import moe_forward, moe_init
 from repro.models.rwkv import (RWKVState, channel_mix_init, make_rwkv_state,

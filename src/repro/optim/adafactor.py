@@ -69,7 +69,8 @@ def update(grads, state: AdafactorState, params, *, lr,
         return new_p.astype(p.dtype), vr, vc
 
     out = jax.tree.map(upd, params, grads, state.vr, state.vc)
-    is_tuple = lambda t: isinstance(t, tuple)
+    def is_tuple(t):
+        return isinstance(t, tuple)
     return (jax.tree.map(lambda t: t[0], out, is_leaf=is_tuple),
             AdafactorState(step=step,
                            vr=jax.tree.map(lambda t: t[1], out, is_leaf=is_tuple),

@@ -48,6 +48,7 @@ def psum_compressed(grads, err_state, axis_names) -> Tuple[dict, dict]:
         return mean_g, new_err
 
     out = jax.tree.map(one, grads, err_state)
-    is_tuple = lambda t: isinstance(t, tuple)
+    def is_tuple(t):
+        return isinstance(t, tuple)
     return (jax.tree.map(lambda t: t[0], out, is_leaf=is_tuple),
             jax.tree.map(lambda t: t[1], out, is_leaf=is_tuple))

@@ -1,0 +1,48 @@
+"""repro.serve — the serving subsystem: train-then-serve, one composition.
+
+Three layers, each usable on its own:
+
+* ``model_cache`` — warm-model cache keyed on (SlabSpec, data
+  fingerprint); a miss fits via ``repro.fit`` and packs the support set
+  for the decision kernel once (``ServingModel``).
+* ``scorer``      — ``BatchScorer``: padding buckets (64/256/1024/4096)
+  over the Pallas ``decision`` kernel so every request shape hits a
+  cached executable; ``mesh=`` flips on the shard_map'd pod-scale path.
+* ``service``     — ``ScoringService``: micro-batching request loop with
+  per-bucket latency/throughput counters.
+
+The package itself is callable — ``repro.serve(X, spec)`` returns a warm
+``ServingModel`` from the default cache — so the one-line entry point
+and the subsystem share a single name (see ``_CallableModule`` below).
+"""
+from __future__ import annotations
+
+import sys as _sys
+import types as _types
+
+from repro.serve.model_cache import (ModelCache, ServingModel, default_cache,
+                                     fingerprint_array, pack_model, serve,
+                                     spec_key)
+from repro.serve.scorer import BUCKETS, BatchScorer, bucket_for
+from repro.serve.service import (BucketStats, Pending, ScoringService,
+                                 run_request_stream)
+
+__all__ = [
+    "ModelCache", "ServingModel", "default_cache", "fingerprint_array",
+    "pack_model", "serve", "spec_key",
+    "BUCKETS", "BatchScorer", "bucket_for",
+    "BucketStats", "Pending", "ScoringService", "run_request_stream",
+]
+
+
+class _CallableModule(_types.ModuleType):
+    """Lets ``repro.serve(X, spec)`` keep working after any
+    ``import repro.serve.<submodule>`` binds this module object onto the
+    parent package (shadowing the lazy function ``repro.__getattr__``
+    would otherwise return)."""
+
+    def __call__(self, X, spec=None, **kwargs):
+        return serve(X, spec, **kwargs)
+
+
+_sys.modules[__name__].__class__ = _CallableModule

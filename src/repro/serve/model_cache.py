@@ -1,0 +1,239 @@
+"""Warm-model cache: fit once per (SlabSpec, data) fingerprint, then serve.
+
+The deployed artifact of the paper is the slab decision function, and its
+cost is dominated by the support set (PAPERS.md, ensemble-decomposition
+line) — so a cache miss does the expensive work exactly once:
+
+1. ``repro.fit`` trains with the requested engine composition,
+2. the model is compacted to its support vectors (``compact_support``),
+3. the SV block is padded to the Pallas decision kernel's tile grid and
+   its row norms precomputed,
+
+and every later request for the same (spec, data, fit-kwargs) key gets
+the prepared ``ServingModel`` back without touching the solver. Keys use
+a content fingerprint of X (sampled above ``_HASH_SAMPLE_BYTES`` so
+fingerprinting a million-row set stays O(MB)), never object identity.
+
+The cache is process-local and thread-safe; multi-model registry /
+cross-process sharing are ROADMAP follow-ons.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ocssvm import (OCSSVMModel, SlabSpec, compact_support,
+                               concrete_spec, with_quantile_offsets)
+
+Array = jax.Array
+
+# Fingerprint at most this many bytes of X: above it, hash an evenly
+# strided row sample plus the exact shape/dtype (collisions would need two
+# same-shape sets agreeing on every sampled row).
+_HASH_SAMPLE_BYTES = 1 << 24
+
+
+@dataclasses.dataclass
+class ServingModel:
+    """A fitted slab packed for the decision kernel, ready to score.
+
+    ``model`` is the compacted reference (support rows only) whose
+    ``decision_function`` the scorer must match exactly; ``t_pad`` /
+    ``gamma_pad`` / ``t_norms`` are the kernel operands, padded once to a
+    multiple of ``tn`` rows and 128 features (zero-gamma padding rows
+    contribute nothing, so a zero-SV model still serves — every query
+    scores ``(0 - rho1) * (rho2 - 0)``).
+    """
+
+    model: OCSSVMModel
+    t_pad: Array        # (M_pad, d_pad) f32 support rows
+    gamma_pad: Array    # (M_pad, 1) f32, zero beyond n_sv
+    t_norms: Array      # (M_pad, 1) f32 precomputed ||t||^2
+    n_sv: int
+    tn: int
+    spec: SlabSpec      # concretized (hashable) spec
+    fit_iters: int = 0
+    _scorer: Optional[object] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def rho1(self) -> Array:
+        return self.model.rho1
+
+    @property
+    def rho2(self) -> Array:
+        return self.model.rho2
+
+    @property
+    def d(self) -> int:
+        return int(self.model.X.shape[1])
+
+    def scorer(self, **kwargs):
+        """The batched scoring engine for this model.
+
+        No kwargs -> one memoized default ``BatchScorer`` (so repeated
+        ``score`` calls share its cached executables); with kwargs a fresh
+        scorer is built (e.g. ``mesh=...`` for the sharded path).
+        """
+        from repro.serve.scorer import BatchScorer
+        if kwargs:
+            return BatchScorer(self, **kwargs)
+        if self._scorer is None:
+            self._scorer = BatchScorer(self)
+        return self._scorer
+
+    def score(self, q: Array, **kwargs) -> Array:
+        """Slab decision values for queries (n, d) -> (n,)."""
+        return self.scorer(**kwargs).score(q)
+
+    def predict(self, q: Array, **kwargs) -> Array:
+        """+1 inside the slab, -1 outside."""
+        return jnp.where(self.score(q, **kwargs) >= 0, 1, -1)
+
+
+def _pad_rows_cols(a: np.ndarray, row_mult: int) -> np.ndarray:
+    rows = max(row_mult, -(-a.shape[0] // row_mult) * row_mult)
+    cols = -(-a.shape[1] // 128) * 128
+    out = np.zeros((rows, cols), np.float32)
+    out[:a.shape[0], :a.shape[1]] = a
+    return out
+
+
+def pack_model(model: OCSSVMModel, *, sv_threshold: float = 1e-7,
+               tn: int = 512) -> ServingModel:
+    """Compact a fitted model to SVs and pack it for ``decision_packed``."""
+    spec = concrete_spec(model.spec)
+    compact = compact_support(model._replace(spec=spec),
+                              threshold=sv_threshold)
+    n_sv = int(compact.X.shape[0])
+    sv = np.asarray(compact.X, np.float32)
+    t_pad = _pad_rows_cols(sv, tn)
+    gamma_pad = np.zeros((t_pad.shape[0], 1), np.float32)
+    gamma_pad[:n_sv, 0] = np.asarray(compact.gamma, np.float32)
+    t_norms = np.sum(t_pad * t_pad, axis=-1, keepdims=True)
+    return ServingModel(model=compact, t_pad=jnp.asarray(t_pad),
+                        gamma_pad=jnp.asarray(gamma_pad),
+                        t_norms=jnp.asarray(t_norms), n_sv=n_sv, tn=tn,
+                        spec=spec)
+
+
+def fingerprint_array(X) -> Tuple:
+    """Content key for a training set: (shape, dtype, sha1 of a sample)."""
+    a = np.ascontiguousarray(np.asarray(X))
+    if a.nbytes > _HASH_SAMPLE_BYTES:
+        stride = max(1, a.shape[0] * a.itemsize * max(1, a[0].size)
+                     // _HASH_SAMPLE_BYTES)
+        sample = np.ascontiguousarray(a[::stride])
+    else:
+        sample = a
+    digest = hashlib.sha1(sample.tobytes()).hexdigest()
+    return (a.shape, str(a.dtype), digest)
+
+
+def spec_key(spec: SlabSpec) -> Tuple:
+    spec = concrete_spec(spec)
+    k = spec.kernel
+    return (spec.nu1, spec.nu2, spec.eps, k.name, k.gamma, k.coef0,
+            k.degree)
+
+
+def _kwarg_key(v) -> Tuple:
+    """Hashable key for one fit kwarg. Arrays (gamma0/f_offset warm
+    starts) are content-fingerprinted — their repr truncates with '...'
+    and would collide."""
+    if isinstance(v, (np.ndarray, jax.Array)):
+        return ("array",) + fingerprint_array(v)
+    return ("repr", repr(v))
+
+
+class ModelCache:
+    """LRU warm-model cache: key = (spec, X fingerprint, fit/pack kwargs).
+
+    ``get_or_fit`` is the only entry point; misses fit + pack under the
+    per-key cost, hits return the prepared ``ServingModel`` (with its
+    memoized scorer and therefore its already-compiled bucket
+    executables). ``hits`` / ``misses`` feed the serving benchmark.
+    """
+
+    def __init__(self, maxsize: int = 8):
+        self.maxsize = maxsize
+        self._entries: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def get_or_fit(self, X, spec: Optional[SlabSpec] = None, *,
+                   offsets: str = "paper", sv_threshold: float = 1e-7,
+                   tn: int = 512, **fit_kwargs) -> ServingModel:
+        """Return a warm ``ServingModel``, fitting on miss.
+
+        offsets: "paper" keeps the solver's margin-SV rho recovery;
+        "quantile" applies ``with_quantile_offsets`` (the usable-slab
+        variant) before compaction. Extra kwargs flow to ``repro.fit``
+        and take part in the cache key.
+        """
+        if spec is None:
+            spec = SlabSpec()
+        if offsets not in ("paper", "quantile"):
+            raise ValueError(f"unknown offsets {offsets!r}; "
+                             "expected 'paper' or 'quantile'")
+        key = (spec_key(spec), fingerprint_array(X), offsets, sv_threshold,
+               tn, tuple(sorted((k, _kwarg_key(v)) for k, v in
+                                fit_kwargs.items())))
+        with self._lock:
+            if key in self._entries:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return self._entries[key]
+            self.misses += 1
+
+        from repro.api import fit
+        res = fit(X, spec, **fit_kwargs)
+        model = res.model
+        if offsets == "quantile":
+            model = with_quantile_offsets(model)
+        served = pack_model(model, sv_threshold=sv_threshold, tn=tn)
+        served.fit_iters = int(res.iters)
+
+        with self._lock:
+            self._entries[key] = served
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+        return served
+
+
+_DEFAULT_CACHE = ModelCache()
+
+
+def default_cache() -> ModelCache:
+    """The process-wide cache behind ``repro.serve(...)``."""
+    return _DEFAULT_CACHE
+
+
+def serve(X, spec: Optional[SlabSpec] = None, *,
+          cache: Optional[ModelCache] = None, **kwargs) -> ServingModel:
+    """Train-then-serve in one engine composition: a warm ``ServingModel``.
+
+    ``repro.serve(X, spec).score(q)`` is the whole serving story; kwargs
+    flow to ``ModelCache.get_or_fit`` (offsets/sv_threshold/tn) and on to
+    ``repro.fit`` (strategy, gram_mode, interpret, tol, ...).
+    """
+    if cache is None:   # not `or`: an empty cache is len()==0 falsy
+        cache = _DEFAULT_CACHE
+    return cache.get_or_fit(X, spec, **kwargs)

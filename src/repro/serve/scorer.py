@@ -1,0 +1,160 @@
+"""Batched scoring engine: padding buckets over the Pallas decision kernel.
+
+Every request is padded up to one of ``BUCKETS`` row counts before it
+reaches the kernel, so the whole service compiles at most one executable
+per (bucket, model) pair — a request of 63, 64 or 65 rows never triggers
+a fresh trace. Requests larger than the top bucket are chunked through
+it (each chunk reuses the same cached executable).
+
+Two execution paths share the packing:
+
+* local  — ``decision_packed`` (jit; Pallas on TPU, interpret on CPU),
+* sharded — the same call inside ``shard_map`` over a mesh data axis:
+  queries are row-sharded, the packed support set is replicated, and no
+  collective is needed (each shard owns its output rows) — pod-scale
+  batches cost one kernel launch per shard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decision.ops import decision_packed
+from repro.serve.model_cache import ServingModel
+from repro.utils.compat import shard_map
+
+Array = jax.Array
+
+# Request row-counts are padded up to one of these; the top bucket is also
+# the chunk size for larger batches. Powers of 4: adjacent buckets stay a
+# small constant factor apart, so padding waste is bounded by 4x rows (and
+# by far less wall-clock — the kernel is support-set bound).
+BUCKETS = (64, 256, 1024, 4096)
+
+
+def bucket_for(n: int) -> int:
+    """Smallest bucket >= n (the top bucket for anything larger)."""
+    if n < 1:
+        raise ValueError(f"need at least one query row, got {n}")
+    for b in BUCKETS:
+        if n <= b:
+            return b
+    return BUCKETS[-1]
+
+
+class BatchScorer:
+    """Scores query batches against one ``ServingModel``.
+
+    ``mesh`` switches on the sharded path: queries are padded to
+    ``bucket * mesh.shape[data_axis]`` rows and ``shard_map``-ed so each
+    device scores its own slice against the replicated support set.
+    """
+
+    def __init__(self, model: ServingModel, *, interpret: bool | None = None,
+                 mesh=None, data_axis: str = "data"):
+        self.model = model
+        self.interpret = interpret
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self._d_pad = int(model.t_pad.shape[1])
+        if mesh is not None and data_axis not in mesh.shape:
+            raise ValueError(f"mesh has no axis {data_axis!r}: "
+                             f"{tuple(mesh.shape)}")
+
+    # -- padding ------------------------------------------------------------
+    def _pad_queries(self, q, rows: int) -> Array:
+        """(n, d) -> (rows, d_pad) f32 with zero padding.
+
+        numpy inputs (the service boundary) are padded host-side into one
+        bucket-shaped buffer — no per-request-shape device programs at
+        all; jax-array inputs stay on device via jnp.pad (the pad op
+        itself is trivial to compile).
+        """
+        if isinstance(q, np.ndarray):
+            out = np.zeros((rows, self._d_pad), np.float32)
+            out[:q.shape[0], :q.shape[1]] = q
+            return jnp.asarray(out)
+        q = q.astype(jnp.float32)
+        return jnp.pad(q, ((0, rows - q.shape[0]),
+                           (0, self._d_pad - q.shape[1])))
+
+    @staticmethod
+    def _tm(bucket: int) -> int:
+        # Query tile: whole bucket when it fits the default tile, else the
+        # default (grid over the bucket). Keeps bucket 64 a 1-tile launch.
+        return min(bucket, 256)
+
+    def _check(self, q):
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (n, d), got {q.shape}")
+        if q.shape[1] != self.model.d:
+            raise ValueError(f"query feature dim {q.shape[1]} != model "
+                             f"feature dim {self.model.d}")
+
+    # -- local path ---------------------------------------------------------
+    def _score_bucket(self, q_pad: Array) -> Array:
+        m = self.model
+        return decision_packed(q_pad, m.t_pad, m.gamma_pad, m.t_norms,
+                               m.rho1, m.rho2, m.spec.kernel,
+                               tm=self._tm(q_pad.shape[0]), tn=m.tn,
+                               interpret=self.interpret)
+
+    def chunk_rows(self) -> int:
+        """Rows one launch can take: the top bucket, times the data-axis
+        size on the sharded path (each shard gets a top-bucket slice)."""
+        nd = int(self.mesh.shape[self.data_axis]) if self.mesh is not None \
+            else 1
+        return BUCKETS[-1] * nd
+
+    def launches_for(self, n: int) -> int:
+        """Kernel launches a single n-row request will cost."""
+        return max(1, -(-n // self.chunk_rows()))
+
+    def score(self, q) -> Array:
+        """Slab decision values (n, d) -> (n,); every shape hits a cached
+        bucket executable. Batches beyond one launch's capacity are
+        chunked (each chunk reuses its cached executable)."""
+        self._check(q)
+        n = int(q.shape[0])
+        cap = self.chunk_rows()
+        if n > cap:
+            chunks = [self._score_once(q[i:i + cap])
+                      for i in range(0, n, cap)]
+            # only the last chunk carries padding rows
+            return jnp.concatenate(chunks)[:n]
+        return self._score_once(q)
+
+    def _score_once(self, q) -> Array:
+        n = int(q.shape[0])
+        if self.mesh is not None:
+            return self._score_sharded(q, n)
+        return self._score_bucket(self._pad_queries(q, bucket_for(n)))[:n]
+
+    # -- sharded path -------------------------------------------------------
+    def _score_sharded(self, q, n: int) -> Array:
+        mesh = self.mesh
+        nd = int(mesh.shape[self.data_axis])
+        per_shard = bucket_for(max(1, -(-n // nd)))
+        q_pad = self._pad_queries(q, per_shard * nd)
+        m = self.model
+        P = jax.sharding.PartitionSpec
+
+        def shard_fn(qs):
+            return decision_packed(qs, m.t_pad, m.gamma_pad, m.t_norms,
+                                   m.rho1, m.rho2, m.spec.kernel,
+                                   tm=self._tm(per_shard), tn=m.tn,
+                                   interpret=self.interpret)
+
+        fn = shard_map(shard_fn, mesh=mesh,
+                       in_specs=(P(self.data_axis, None),),
+                       out_specs=P(self.data_axis))
+        with mesh:
+            out = fn(q_pad)
+        return out[:n]
+
+    def warmup(self) -> None:
+        """Pre-compile every bucket executable (cold-start control)."""
+        for b in BUCKETS:
+            jax.block_until_ready(
+                self._score_bucket(jnp.zeros((b, self._d_pad), jnp.float32)))

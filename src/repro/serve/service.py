@@ -1,0 +1,177 @@
+"""Micro-batching request loop over a ``BatchScorer``.
+
+Scoring cost is dominated by the support-set pass, not the query rows —
+so the service coalesces queued requests into one kernel launch: submit
+enqueues and returns a handle, ``flush`` concatenates queued rows up to
+the top padding bucket, scores the group once, and scatters each slice
+back to its handle. Per-bucket latency/throughput counters expose where
+the traffic actually lands (the launch CLI and the serving benchmark
+print them).
+
+Synchronous by design: admission control / async draining is a ROADMAP
+follow-on; this loop is the deterministic core both would reuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.serve.scorer import BUCKETS, BatchScorer, bucket_for
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Counters for one padding bucket."""
+
+    batches: int = 0          # kernel launches
+    queries: int = 0          # live (unpadded) rows scored
+    requests: int = 0         # handles served
+    total_s: float = 0.0      # summed launch wall-clock
+    last_s: float = 0.0
+
+    def record(self, queries: int, requests: int, dt: float,
+               launches: int = 1) -> None:
+        self.batches += launches
+        self.queries += queries
+        self.requests += requests
+        self.total_s += dt
+        self.last_s = dt
+
+    @property
+    def mean_latency_s(self) -> float:
+        return self.total_s / self.batches if self.batches else 0.0
+
+    @property
+    def throughput_qps(self) -> float:
+        return self.queries / self.total_s if self.total_s > 0 else 0.0
+
+
+class Pending:
+    """Handle for a submitted request; ``result()`` flushes if needed."""
+
+    def __init__(self, service: "ScoringService", n: int):
+        self._service = service
+        self.n = n
+        self._result = None
+        self._done = False
+
+    def _set(self, scores) -> None:
+        self._result = scores
+        self._done = True
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        if not self._done:
+            self._service.flush()
+        return self._result
+
+
+class ScoringService:
+    """Coalesces queued scoring requests into bucket-sized launches."""
+
+    def __init__(self, scorer: BatchScorer, *,
+                 max_batch: int = BUCKETS[-1]):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.scorer = scorer
+        self.max_batch = max_batch
+        self._queue: List = []      # [(q, Pending)]
+        self.stats: Dict[int, BucketStats] = {}
+
+    @property
+    def queued_rows(self) -> int:
+        return sum(p.n for _, p in self._queue)
+
+    def submit(self, q) -> Pending:
+        """Enqueue one request (n, d); returns its handle."""
+        self.scorer._check(q)
+        p = Pending(self, int(q.shape[0]))
+        self._queue.append((q, p))
+        return p
+
+    def score(self, q):
+        """Submit + flush convenience for a single request."""
+        return self.submit(q).result()
+
+    def flush(self) -> int:
+        """Drain the queue: group -> one launch per group -> scatter.
+
+        Requests are grouped in arrival order until adding the next one
+        would cross ``max_batch`` rows (an oversized single request forms
+        its own group and is chunked by the scorer into several
+        launches). Returns the number of kernel launches. Group rows are
+        concatenated host-side (requests arrive as host arrays at the
+        service boundary).
+        """
+        launches = 0
+        while self._queue:
+            group = [self._queue.pop(0)]
+            rows = group[0][1].n
+            while (self._queue
+                   and rows + self._queue[0][1].n <= self.max_batch):
+                item = self._queue.pop(0)
+                group.append(item)
+                rows += item[1].n
+
+            if len(group) == 1:
+                batch = np.asarray(group[0][0], np.float32)
+            else:
+                batch = np.concatenate(
+                    [np.asarray(q, np.float32) for q, _ in group])
+            t0 = time.perf_counter()
+            scores = self.scorer.score(batch)
+            jax.block_until_ready(scores)
+            dt = time.perf_counter() - t0
+            # An oversized single request is chunked inside the scorer:
+            # count its real kernel launches, filed under the top bucket
+            # (each full chunk is one top-bucket launch).
+            k = self.scorer.launches_for(rows)
+            launches += k
+            self.stats.setdefault(
+                bucket_for(rows), BucketStats()).record(rows, len(group),
+                                                        dt, launches=k)
+
+            off = 0
+            for _, p in group:
+                p._set(scores[off:off + p.n])
+                off += p.n
+        return launches
+
+    def stats_lines(self) -> List[str]:
+        """Human/CSV-ready per-bucket counter lines."""
+        lines = []
+        for b in sorted(self.stats):
+            s = self.stats[b]
+            lines.append(
+                f"bucket={b},batches={s.batches},requests={s.requests},"
+                f"queries={s.queries},mean_ms={s.mean_latency_s*1e3:.2f},"
+                f"last_ms={s.last_s*1e3:.2f},qps={s.throughput_qps:.0f}")
+        return lines
+
+    def stats_dict(self) -> Dict[int, Dict[str, float]]:
+        return {b: dataclasses.asdict(s) for b, s in self.stats.items()}
+
+
+def run_request_stream(service: ScoringService, requests,
+                       coalesce: Optional[int] = None) -> List:
+    """Feed a request iterable through the service in coalesced windows.
+
+    ``coalesce`` requests are submitted before each flush (default: let
+    the queue grow to one full window per flush ~ the micro-batching
+    sweet spot). Returns the scores in request order.
+    """
+    window = coalesce if coalesce is not None else 16
+    handles = []
+    for i, q in enumerate(requests):
+        handles.append(service.submit(q))
+        if (i + 1) % window == 0:
+            service.flush()
+    service.flush()
+    return [h.result() for h in handles]

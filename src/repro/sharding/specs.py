@@ -18,7 +18,6 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Rules keyed by (parent, leaf) or leaf name: logical axes for the LAST

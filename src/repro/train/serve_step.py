@@ -5,7 +5,7 @@ contexts the cache IS the memory footprint and a copy would double it.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,8 +6,7 @@ microbatch slices — activations for only one microbatch are ever live.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

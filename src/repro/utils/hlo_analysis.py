@@ -22,7 +22,6 @@ analytic inventory in utils/roofline.py.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

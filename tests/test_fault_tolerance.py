@@ -1,7 +1,6 @@
 """Fault-tolerant loop: crash/restart determinism, straggler detection,
 data-pipeline cursor resume."""
 import jax
-import numpy as np
 
 from repro.configs import ARCHS
 from repro.data.synthetic import SyntheticPipeline

@@ -1,0 +1,301 @@
+"""Serving-subsystem tests: bucket-edge parity against the model's jnp
+reference, warm-cache semantics, micro-batching scatter, the sharded
+scorer (subprocess, forced host devices), and the fit -> PallasGram
+``interpret`` plumbing."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import OCSSVMModel, SlabSpec, compact_support, rbf
+from repro.data import make_toy
+from repro.serve import (BUCKETS, ModelCache, ScoringService, bucket_for,
+                         pack_model)
+
+SPEC = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
+M = 96
+
+# every bucket boundary (63/64/65, ...), non-multiples of the query tile,
+# single row, and a beyond-top-bucket size that exercises chunking
+PARITY_SIZES = [1, 63, 64, 65, 200, 255, 256, 257, 1000]
+
+
+@pytest.fixture(scope="module")
+def served():
+    X, _ = make_toy(jax.random.PRNGKey(5), M)
+    return repro.serve(X, SPEC, cache=ModelCache(), tol=1e-3)
+
+
+def _ref(sm, q):
+    return np.asarray(sm.model.decision_function(jnp.asarray(q, jnp.float32)))
+
+
+@pytest.mark.parametrize("n", PARITY_SIZES)
+def test_scorer_parity_bucket_edges(served, n):
+    q, _ = make_toy(jax.random.PRNGKey(n), n)
+    out = served.score(np.asarray(q))
+    assert out.shape == (n,)
+    np.testing.assert_allclose(np.asarray(out), _ref(served, q),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_scorer_chunks_beyond_top_bucket(served):
+    n = BUCKETS[-1] + 70    # one full top-bucket chunk + a remainder chunk
+    q, _ = make_toy(jax.random.PRNGKey(77), n)
+    out = served.score(np.asarray(q))
+    assert out.shape == (n,)
+    np.testing.assert_allclose(np.asarray(out), _ref(served, q),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_cache_distinguishes_array_kwargs():
+    """Array-valued fit kwargs (warm starts) are content-fingerprinted:
+    reprs truncate with '...' and would collide."""
+    from repro.serve.model_cache import _kwarg_key
+    a = np.zeros((2000,), np.float32)
+    b = a.copy()
+    b[1000] = 1.0
+    assert repr(a) == repr(b)                      # the trap
+    assert _kwarg_key(a) != _kwarg_key(b)
+    assert _kwarg_key(a) == _kwarg_key(a.copy())
+
+
+def test_fit_interpret_forces_pallas_mode_small_m():
+    """An explicit interpret override must reach the Pallas provider even
+    below the precomputed-Gram threshold."""
+    from repro.api import _auto_gram_mode
+    assert _auto_gram_mode(100) == "precomputed"
+    assert _auto_gram_mode(100, interpret=True) == "pallas"
+    assert _auto_gram_mode(100, interpret=False) == "pallas"
+
+
+def test_service_counts_chunked_launches(served):
+    """A single oversized request is several kernel launches; the
+    counters must say so."""
+    svc = ScoringService(served.scorer())
+    n = BUCKETS[-1] + 70
+    q = np.asarray(make_toy(jax.random.PRNGKey(88), n)[0])
+    svc.submit(q)
+    assert svc.flush() == 2
+    assert svc.stats[BUCKETS[-1]].batches == 2
+    assert svc.stats[BUCKETS[-1]].queries == n
+
+
+def test_scorer_device_array_input(served):
+    q, _ = make_toy(jax.random.PRNGKey(9), 33)
+    np.testing.assert_allclose(np.asarray(served.score(q)), _ref(served, q),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_zero_support_vector_model():
+    """All-zero gamma packs to an all-padding tile; every query scores the
+    constant (0 - rho1) * (rho2 - 0)."""
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(40, 3)),
+                    jnp.float32)
+    model = OCSSVMModel(gamma=jnp.zeros((40,)), rho1=jnp.float32(0.2),
+                        rho2=jnp.float32(0.8), X=X, spec=SPEC)
+    sm = pack_model(model)
+    assert sm.n_sv == 0
+    q = np.random.default_rng(1).normal(size=(65, 3)).astype(np.float32)
+    out = np.asarray(sm.score(q))
+    np.testing.assert_allclose(out, np.full((65,), -0.2 * 0.8),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(out, _ref(sm, q), rtol=1e-6, atol=1e-6)
+
+
+def test_compact_support_drops_only_tiny_gammas():
+    X, _ = make_toy(jax.random.PRNGKey(3), 32)
+    gamma = jnp.zeros((32,)).at[jnp.asarray([3, 7, 20])].set(
+        jnp.asarray([0.4, -0.2, 0.3]))
+    model = OCSSVMModel(gamma=gamma, rho1=jnp.float32(0.0),
+                        rho2=jnp.float32(1.0), X=X, spec=SPEC)
+    small = compact_support(model)
+    assert small.X.shape == (3, X.shape[1])
+    np.testing.assert_allclose(np.asarray(small.gamma), [0.4, -0.2, 0.3])
+    q, _ = make_toy(jax.random.PRNGKey(4), 10)
+    np.testing.assert_allclose(np.asarray(small.decision_function(q)),
+                               np.asarray(model.decision_function(q)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_bucket_for_policy():
+    assert [bucket_for(n) for n in (1, 63, 64, 65, 256, 257, 4096, 9999)] \
+        == [64, 64, 64, 256, 256, 1024, 4096, 4096]
+    with pytest.raises(ValueError):
+        bucket_for(0)
+
+
+def test_scorer_rejects_bad_shapes(served):
+    with pytest.raises(ValueError):
+        served.scorer().score(np.zeros((4, 7), np.float32))  # wrong d
+    with pytest.raises(ValueError):
+        served.scorer().score(np.zeros((4,), np.float32))    # not 2-D
+
+
+def test_cache_hits_skip_fit(monkeypatch):
+    from repro import api
+    calls = {"n": 0}
+    real_fit = api.fit
+
+    def counting_fit(*args, **kwargs):
+        calls["n"] += 1
+        return real_fit(*args, **kwargs)
+
+    monkeypatch.setattr(api, "fit", counting_fit)
+    cache = ModelCache()
+    X, _ = make_toy(jax.random.PRNGKey(5), M)
+    sm1 = cache.get_or_fit(X, SPEC, tol=1e-3)
+    sm2 = cache.get_or_fit(X, SPEC, tol=1e-3)
+    assert sm2 is sm1 and calls["n"] == 1
+    assert (cache.hits, cache.misses) == (1, 1)
+    # a different spec, data, or fit kwarg is a different model
+    cache.get_or_fit(X, SPEC, tol=1e-4)
+    spec2 = SlabSpec(nu1=0.4, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
+    cache.get_or_fit(X, spec2, tol=1e-3)
+    X2, _ = make_toy(jax.random.PRNGKey(6), M)
+    cache.get_or_fit(X2, SPEC, tol=1e-3)
+    assert calls["n"] == 4 and cache.misses == 4
+
+
+def test_cache_lru_eviction():
+    cache = ModelCache(maxsize=2)
+    X, _ = make_toy(jax.random.PRNGKey(5), 48)
+    for nu1 in (0.3, 0.4, 0.5):
+        cache.get_or_fit(
+            X, SlabSpec(nu1=nu1, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5)),
+            tol=1e-2, max_outer=50)
+    assert len(cache) == 2
+    # the oldest entry (nu1=0.3) was evicted -> a re-request misses
+    cache.get_or_fit(
+        X, SlabSpec(nu1=0.3, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5)),
+        tol=1e-2, max_outer=50)
+    assert cache.misses == 4
+
+
+def test_service_microbatch_scatter_parity(served):
+    """Queued requests coalesce into one launch and every handle gets
+    exactly its own rows back."""
+    svc = ScoringService(served.scorer())
+    sizes = (5, 48, 63, 100)
+    reqs = [np.asarray(make_toy(jax.random.PRNGKey(40 + i), n)[0])
+            for i, n in enumerate(sizes)]
+    handles = [svc.submit(q) for q in reqs]
+    assert svc.queued_rows == sum(sizes)
+    launches = svc.flush()
+    assert launches == 1          # 216 rows coalesce under the top bucket
+    for q, h in zip(reqs, handles):
+        assert h.done
+        np.testing.assert_allclose(np.asarray(h.result()), _ref(served, q),
+                                   rtol=2e-4, atol=2e-4)
+    b = bucket_for(sum(sizes))
+    assert svc.stats[b].batches == 1
+    assert svc.stats[b].requests == len(sizes)
+    assert svc.stats[b].queries == sum(sizes)
+    assert svc.stats[b].total_s > 0
+
+
+def test_service_groups_respect_max_batch(served):
+    svc = ScoringService(served.scorer(), max_batch=128)
+    for i in range(4):
+        svc.submit(np.asarray(make_toy(jax.random.PRNGKey(50 + i), 40)[0]))
+    # 40+40 fits under 128, a third 40 would not: two groups of two
+    assert svc.flush() == 2
+    assert sum(s.requests for s in svc.stats.values()) == 4
+    assert sum(s.batches for s in svc.stats.values()) == 2
+
+
+def test_service_result_triggers_flush(served):
+    svc = ScoringService(served.scorer())
+    q = np.asarray(make_toy(jax.random.PRNGKey(60), 10)[0])
+    h = svc.submit(q)
+    assert not h.done
+    np.testing.assert_allclose(np.asarray(h.result()), _ref(served, q),
+                               rtol=2e-4, atol=2e-4)
+    assert h.done and not svc._queue
+
+
+def test_fit_threads_interpret_to_pallas_provider(monkeypatch):
+    """repro.fit(..., interpret=True) must reach the PallasGram provider —
+    the deterministic CPU-CI hook for the pallas path."""
+    from repro.core.engine import gram as engine_gram
+    seen = {}
+    real = engine_gram.PallasGram.__init__
+
+    def spying_init(self, X, kernel, interpret=None):
+        seen["interpret"] = interpret
+        real(self, X, kernel, interpret=interpret)
+
+    monkeypatch.setattr(engine_gram.PallasGram, "__init__", spying_init)
+    X, _ = make_toy(jax.random.PRNGKey(5), M)
+    res = repro.fit(X, SPEC, strategy="blocked", gram_mode="pallas",
+                    interpret=True, tol=1e-2, max_outer=64)
+    assert seen["interpret"] is True
+    assert np.isfinite(float(res.gap))
+
+
+def test_fit_distributed_rejects_interpret():
+    X, _ = make_toy(jax.random.PRNGKey(5), 32)
+    with pytest.raises(ValueError):
+        repro.fit(X, SPEC, strategy="distributed", mesh=object(),
+                  interpret=True)
+
+
+def test_example_has_no_direct_kernel_imports():
+    """Acceptance: the example runs through the serve subsystem only."""
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "serve_ocssvm.py")
+    with open(path) as fh:
+        src = fh.read()
+    assert "repro.kernels" not in src
+    assert "repro.serve" in src or "repro.serve(" in src
+
+
+def test_sharded_scorer_matches_local():
+    """shard_map'd scoring over a forced 4-device host mesh must agree
+    with the local bucketed path (subprocess: the main pytest process
+    stays 1-device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        import numpy as np
+        import repro
+        from repro.core import SlabSpec, rbf
+        from repro.data import make_toy
+        X, _ = make_toy(jax.random.PRNGKey(5), 96)
+        spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
+        sm = repro.serve(X, spec, tol=1e-3)
+        mesh = jax.make_mesh((4,), ("data",))
+        q, _ = make_toy(jax.random.PRNGKey(7), 130)   # not a shard multiple
+        local = np.asarray(sm.score(np.asarray(q)))
+        sharded = np.asarray(sm.score(np.asarray(q), mesh=mesh))
+        # beyond one sharded launch's capacity (4 * top bucket): must chunk
+        scorer = sm.scorer(mesh=mesh)
+        nbig = scorer.chunk_rows() + 60
+        qb, _ = make_toy(jax.random.PRNGKey(8), nbig)
+        big = np.asarray(scorer.score(np.asarray(qb)))
+        ref = np.asarray(sm.model.decision_function(
+            jnp.asarray(qb, jnp.float32)))
+        print(json.dumps({
+            "max_abs_diff": float(np.max(np.abs(local - sharded))),
+            "n": int(sharded.shape[0]),
+            "big_n": int(big.shape[0]),
+            "big_max_abs_diff": float(np.max(np.abs(big - ref)))}))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n"] == 130
+    assert res["max_abs_diff"] < 1e-5
+    assert res["big_n"] == 4 * 4096 + 60
+    assert res["big_max_abs_diff"] < 1e-4

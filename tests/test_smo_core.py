@@ -7,7 +7,6 @@ import pytest
 
 from repro.core import (SlabSpec, dual_objective, feasible_init, linear,
                         mcc, rbf, solve_blocked, solve_qp, solve_smo)
-from repro.core.kkt import slab_margin, violation
 from repro.core.ocssvm import recover_rhos
 from repro.data import make_toy
 

@@ -5,10 +5,11 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import SlabSpec, feasible_init, linear, rbf, solve_blocked
-from repro.core.qp_baseline import project_box_hyperplane
+from repro.core import (SlabSpec, feasible_init, linear, rbf,  # noqa: E402
+                        solve_blocked)
+from repro.core.qp_baseline import project_box_hyperplane  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -2,7 +2,6 @@
 feature of the framework (backbone features -> OCSSVM slab head -> OOD
 scores), plus the full train->checkpoint->serve loop on a reduced arch."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS

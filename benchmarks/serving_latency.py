@@ -5,8 +5,14 @@ packing) plus the first score per bucket (compiles the executable).
 Warm = the same request stream again: cache hit + cached executables.
 Acceptance (ISSUE 2): warm beats cold by >= 5x on the 2000-row toy.
 
+``--precisions`` repeats the whole cold/warm protocol once per Gram tile
+precision (each is its own cache entry + packed model) and nests the
+per-precision rows under ``per_precision`` in the BENCH JSON — the trend
+line for the 16-bit support-stream win (meaningful on TPU; the
+interpret-mode CPU numbers only track that the path stays wired).
+
     PYTHONPATH=src python benchmarks/serving_latency.py [--reduced]
-        [--json PATH]
+        [--precisions f32,bf16] [--json PATH]
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ import numpy as np
 import repro
 from repro.core import SlabSpec, rbf
 from repro.data import make_toy
+from repro.kernels.precision import parse_precisions
 from repro.serve import ModelCache, ScoringService
 
 BATCHES = (64, 256, 1024)
@@ -37,24 +44,27 @@ def _stream(sm, batches):
     return out
 
 
-def run(m: int = 2000, batches=BATCHES, tol: float = 1e-3) -> dict:
+def run(m: int = 2000, batches=BATCHES, tol: float = 1e-3,
+        precision: str = "f32") -> dict:
     spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
     X, _ = make_toy(jax.random.PRNGKey(0), m)
     cache = ModelCache()
 
     t0 = time.perf_counter()
-    sm = repro.serve(X, spec, cache=cache, tol=tol, P=16)
+    sm = repro.serve(X, spec, cache=cache, tol=tol, P=16,
+                     precision=precision)
     cold_first = _stream(sm, batches)
     cold_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    sm2 = repro.serve(X, spec, cache=cache, tol=tol, P=16)
+    sm2 = repro.serve(X, spec, cache=cache, tol=tol, P=16,
+                      precision=precision)
     warm_first = _stream(sm2, batches)
     warm_s = time.perf_counter() - t0
 
     assert sm2 is sm and cache.hits == 1, "warm pass must hit the cache"
     return {
-        "m": m, "n_sv": sm.n_sv, "tol": tol,
+        "m": m, "n_sv": sm.n_sv, "tol": tol, "precision": precision,
         "cold_s": cold_s, "warm_s": warm_s,
         "speedup": cold_s / warm_s,
         "cold_per_bucket_s": {str(k): v for k, v in cold_first.items()},
@@ -62,28 +72,42 @@ def run(m: int = 2000, batches=BATCHES, tol: float = 1e-3) -> dict:
     }
 
 
+def _print_rows(res):
+    print(f"serving,m={res['m']},n_sv={res['n_sv']},"
+          f"precision={res['precision']},"
+          f"cold={res['cold_s']*1e3:.0f}ms,warm={res['warm_s']*1e3:.1f}ms,"
+          f"speedup={res['speedup']:.0f}x")
+    for b in res["cold_per_bucket_s"]:
+        print(f"serving_bucket,b={b},precision={res['precision']},"
+              f"cold={res['cold_per_bucket_s'][b]*1e3:.1f}ms,"
+              f"warm={res['warm_per_bucket_s'][b]*1e3:.1f}ms")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true",
                     help="small problem for CI smoke (m=500, 2 buckets)")
+    ap.add_argument("--precisions", type=str, default="f32",
+                    help="comma list of Gram tile precisions to benchmark "
+                         "(each runs the full cold/warm protocol)")
     ap.add_argument("--json", type=str, default=None)
     args = ap.parse_args(argv)
 
-    if args.reduced:
-        res = run(m=500, batches=(64, 256))
-    else:
-        res = run()
+    precisions = parse_precisions(args.precisions)
+    kwargs = dict(m=500, batches=(64, 256)) if args.reduced else {}
+    per_precision = {}
+    for p in precisions:
+        per_precision[p] = run(precision=p, **kwargs)
+        _print_rows(per_precision[p])
+        if per_precision[p]["speedup"] < 5:
+            print(f"WARNING: warm speedup "
+                  f"{per_precision[p]['speedup']:.1f}x below the 5x "
+                  f"acceptance bar at precision={p}")
 
-    print(f"serving,m={res['m']},n_sv={res['n_sv']},"
-          f"cold={res['cold_s']*1e3:.0f}ms,warm={res['warm_s']*1e3:.1f}ms,"
-          f"speedup={res['speedup']:.0f}x")
-    for b in res["cold_per_bucket_s"]:
-        print(f"serving_bucket,b={b},"
-              f"cold={res['cold_per_bucket_s'][b]*1e3:.1f}ms,"
-              f"warm={res['warm_per_bucket_s'][b]*1e3:.1f}ms")
-    if res["speedup"] < 5:
-        print(f"WARNING: warm speedup {res['speedup']:.1f}x "
-              "below the 5x acceptance bar")
+    # top level keeps the first (f32 by convention) run's schema so older
+    # trend consumers of BENCH_serving.json keep working
+    res = dict(per_precision[precisions[0]])
+    res["per_precision"] = per_precision
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(res, fh, indent=2)

@@ -56,6 +56,7 @@ def fit(
     strategy: str = "auto",
     gram_mode: Optional[str] = None,
     interpret: Optional[bool] = None,
+    precision: str = "f32",
     P: int = 8,
     tol: float = 1e-4,
     mesh=None,
@@ -69,7 +70,10 @@ def fit(
     "distributed" (requires ``mesh``). interpret: force Pallas
     interpret mode on (True; CPU CI) or off (False; TPU) for the
     ``gram_mode="pallas"`` provider instead of auto-detecting the
-    backend. Extra kwargs flow to the chosen solver
+    backend. precision: Gram tile-input dtype ("f32" default, "bf16",
+    "f16") — halves kernel HBM traffic; dot products still accumulate
+    f32 (``repro.kernels.precision``; every strategy honors it,
+    including "distributed"). Extra kwargs flow to the chosen solver
     (max_iters/max_outer, patience, gamma0, ...).
     """
     if spec is None:
@@ -106,18 +110,21 @@ def fit(
                 "access (Pallas-in-shard is a ROADMAP open item)")
         return solve_blocked_distributed(X, spec, mesh,
                                          data_axes=data_axes, P_pairs=P,
-                                         tol=tol, **kwargs)
+                                         tol=tol, precision=precision,
+                                         **kwargs)
 
     gm = gram_mode if gram_mode is not None else _auto_gram_mode(m, interpret)
     if strategy in ("paper", "mvp"):
         return solve_smo(X, spec, selection=strategy, gram_mode=gm,
-                         interpret=interpret, tol=tol, **kwargs)
+                         interpret=interpret, precision=precision, tol=tol,
+                         **kwargs)
     if strategy == "shrinking":
         return solve_blocked_shrinking(X, spec, P=P, gram_mode=gm,
-                                       interpret=interpret, tol=tol,
+                                       interpret=interpret,
+                                       precision=precision, tol=tol,
                                        **kwargs)
     return solve_blocked(X, spec, P=P, gram_mode=gm, interpret=interpret,
-                         tol=tol, **kwargs)
+                         precision=precision, tol=tol, **kwargs)
 
 
 def serve(X: Array, spec: Optional[SlabSpec] = None, **kwargs):
@@ -128,7 +135,9 @@ def serve(X: Array, spec: Optional[SlabSpec] = None, **kwargs):
     (spec, data) key) and returns a ``repro.serve.ServingModel`` whose
     ``score`` runs batched through the Pallas decision kernel. kwargs
     flow to ``repro.serve.ModelCache.get_or_fit`` (cache=, offsets=,
-    sv_threshold=, tn=) and on to ``fit`` (strategy, interpret, tol, ...).
+    sv_threshold=, tn=, precision=) and on to ``fit`` (strategy,
+    interpret, tol, ...); ``precision="bf16"`` trains AND serves with
+    16-bit Gram tile streams (f32 accumulate/epilogue).
     """
     from repro.serve.model_cache import serve as _serve
     return _serve(X, spec, **kwargs)

@@ -42,6 +42,7 @@ def solve_blocked(
     P: int = 8,
     gram_mode: str = "on_the_fly",
     interpret: Optional[bool] = None,
+    precision: str = "f32",
     tol: float = 1e-4,
     max_outer: int = 50_000,
     patience: int = 20,
@@ -56,10 +57,12 @@ def solve_blocked(
     The spec stays a traced pytree except under gram_mode="pallas", where
     the Pallas kernel must specialize on concrete kernel parameters (the
     concretized spec becomes a static jit argument). ``interpret``
-    force-overrides the Pallas provider's interpret-mode autodetection."""
-    kw = dict(P=P, gram_mode=gram_mode, interpret=interpret, tol=tol,
-              max_outer=max_outer, patience=patience, gamma0=gamma0,
-              f_offset=f_offset)
+    force-overrides the Pallas provider's interpret-mode autodetection;
+    ``precision`` is the Gram tile-input dtype
+    (``repro.kernels.precision``)."""
+    kw = dict(P=P, gram_mode=gram_mode, interpret=interpret,
+              precision=precision, tol=tol, max_outer=max_outer,
+              patience=patience, gamma0=gamma0, f_offset=f_offset)
     if gram_mode == "pallas":
         return _solve_static(X, concrete_spec(spec), **kw)
     return _solve_traced(X, spec, **kw)
@@ -72,6 +75,7 @@ def _solve_impl(
     P: int,
     gram_mode: str,
     interpret: Optional[bool],
+    precision: str,
     tol: float,
     max_outer: int,
     patience: int,
@@ -86,7 +90,7 @@ def _solve_impl(
              else gamma0.astype(jnp.float32))
 
     provider = engine.make_provider(gram_mode, Xf, spec.kernel,
-                                    interpret=interpret)
+                                    interpret=interpret, precision=precision)
     selector = engine.BlockSelector(provider, P=P, hi=hi, lo=lo)
     stats_fn = partial(engine.solver_stats_fresh, hi=hi, lo=lo, m=m, tol=tol)
 
@@ -101,8 +105,8 @@ def _solve_impl(
                      converged=s.gap <= tol)
 
 
-_SOLVE_STATIC = ("P", "gram_mode", "interpret", "tol", "max_outer",
-                 "patience")
+_SOLVE_STATIC = ("P", "gram_mode", "interpret", "precision", "tol",
+                 "max_outer", "patience")
 _solve_traced = partial(jax.jit, static_argnames=_SOLVE_STATIC)(_solve_impl)
 _solve_static = partial(jax.jit,
                         static_argnames=_SOLVE_STATIC + ("spec",))(_solve_impl)

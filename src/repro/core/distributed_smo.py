@@ -38,6 +38,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import engine
 from repro.core.engine.types import SMOResult
 from repro.core.ocssvm import OCSSVMModel, SlabSpec, feasible_init
+from repro.kernels.precision import round_to_tile
 from repro.utils.compat import shard_map
 
 Array = jax.Array
@@ -64,6 +65,7 @@ def solve_blocked_distributed(
     patience: int = 20,
     fused_stats: bool = True,
     rho_every: int = 1,
+    precision: str = "f32",
 ) -> SMOResult:
     """Solve the OCSSVM dual with X row-sharded over ``data_axes``.
 
@@ -73,7 +75,10 @@ def solve_blocked_distributed(
     there is no slower unfused path to fall back to anymore.
     rho_every=k recomputes rho1/rho2 every k iterations (the margin-SV
     averages drift slowly near convergence; the paper recomputes each
-    step).
+    step). precision: Gram tile-input dtype — the sharded provider
+    applies the same tile rounding as the local providers, so a
+    distributed solve matches its single-device counterpart at any
+    precision.
     """
     del fused_stats
     m, d = X.shape
@@ -92,13 +97,17 @@ def solve_blocked_distributed(
     hi, lo = spec.upper(m), spec.lower(m)
 
     def local_solve(X_l, gamma_l, valid_l):
+        # Tile-round once, before provider AND selector: both then see
+        # identical rows (ShardedGram's precision invariant) and no
+        # per-iteration re-round is needed anywhere.
+        X_l = round_to_tile(X_l, precision)
         rank = _axis_rank(data_axes, sizes)
         gids = rank * m_local + jnp.arange(m_local, dtype=jnp.int32)
         comm = engine.MeshComm(data_axes)
 
         provider = engine.ShardedGram(X_l, kernel, gids=gids, rank=rank,
                                       m_local=m_local, m_pad=m_pad,
-                                      axes=data_axes)
+                                      axes=data_axes, precision=precision)
         selector = engine.ShardedBlockSelector(X_l, P=P_pairs, hi=hi, lo=lo,
                                                gids=gids, valid=valid_l,
                                                axes=data_axes)

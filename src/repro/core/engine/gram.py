@@ -23,6 +23,14 @@ Implementations:
                     only the local f/gamma slices, selections arrive as
                     gathered (2P, d) row blocks so no global indexing is
                     ever needed.
+
+Every provider takes a ``precision`` ("f32" default, "bf16", "f16"): the
+training rows are round-tripped through the tile dtype ONCE at
+construction, so the pure-jnp providers see exactly the rounded values
+the Pallas provider streams in 16-bit tiles — a given (selector,
+precision) pair converges to the same gamma whichever provider runs it.
+Norms, the f-cache, gamma and all epilogues stay f32
+(``repro.kernels.precision``).
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ import jax.numpy as jnp
 from repro.core.kernel_fn import KernelFn
 from repro.core.engine.types import Selection
 from repro.kernels.fupdate.ops import fupdate
+from repro.kernels.precision import check_precision, round_to_tile
 
 Array = jax.Array
 
@@ -68,11 +77,12 @@ class PrecomputedGram:
 
     name = "precomputed"
 
-    def __init__(self, X: Array, kernel: KernelFn):
-        self.X = X
+    def __init__(self, X: Array, kernel: KernelFn, precision: str = "f32"):
+        self.precision = check_precision(precision)
+        self.X = round_to_tile(X, precision)
         self.kernel = kernel
-        self.K = kernel.gram(X)
-        self._diag = kernel.diag(X)
+        self.K = kernel.gram(self.X)
+        self._diag = kernel.diag(self.X)
 
     def diag(self) -> Array:
         return self._diag
@@ -111,10 +121,11 @@ class OnTheFlyGram:
 
     name = "on_the_fly"
 
-    def __init__(self, X: Array, kernel: KernelFn):
-        self.X = X
+    def __init__(self, X: Array, kernel: KernelFn, precision: str = "f32"):
+        self.precision = check_precision(precision)
+        self.X = round_to_tile(X, precision)
         self.kernel = kernel
-        self._diag = kernel.diag(X)
+        self._diag = kernel.diag(self.X)
 
     def diag(self) -> Array:
         return self._diag
@@ -151,8 +162,8 @@ class PallasGram(OnTheFlyGram):
     name = "pallas"
 
     def __init__(self, X: Array, kernel: KernelFn,
-                 interpret: bool | None = None):
-        super().__init__(X, kernel)
+                 interpret: bool | None = None, precision: str = "f32"):
+        super().__init__(X, kernel, precision=precision)
         self.interpret = interpret   # None -> auto (True off-TPU)
 
     def init_scores(self, gamma: Array) -> Array:
@@ -161,7 +172,8 @@ class PallasGram(OnTheFlyGram):
             # block must fit VMEM, so only below the blocking threshold.
             zero = jnp.zeros((self.X.shape[0],), jnp.float32)
             return fupdate(self.X, self.X, gamma, zero, self.kernel,
-                           interpret=self.interpret)
+                           interpret=self.interpret,
+                           precision=self.precision)
         return raw_scores_blocked(self.X, gamma, self.kernel)
 
     def apply_update(self, f: Array, sel: Selection, delta: Array) -> Array:
@@ -169,8 +181,10 @@ class PallasGram(OnTheFlyGram):
             # A selector already produced the full columns (paper rule's
             # movability mask) — reusing them beats a second HBM pass.
             return f + sel.rows @ delta
+        # self.X is already tile-rounded, so the in-kernel cast to the
+        # 16-bit stream dtype is exact — kernel and jnp paths agree.
         return fupdate(self.X, sel.X, delta, f, self.kernel,
-                       interpret=self.interpret)
+                       interpret=self.interpret, precision=self.precision)
 
 
 class ShardedGram:
@@ -179,13 +193,20 @@ class ShardedGram:
     ``gids`` are this shard's global row ids; selections carry gathered
     (2P, d) row blocks, so the per-iteration update needs no communication
     at all — only ``init_scores`` all-gathers (once, column-blocked).
+
+    Precision invariant: ``X_local`` is tile-rounded at construction
+    (idempotent), and the selector feeding this provider must gather its
+    candidate rows from the same rounded shard data — the distributed
+    facade rounds once, before building both.
     """
 
     name = "sharded"
 
     def __init__(self, X_local: Array, kernel: KernelFn, *, gids: Array,
-                 rank: Array, m_local: int, m_pad: int, axes):
-        self.X = X_local
+                 rank: Array, m_local: int, m_pad: int, axes,
+                 precision: str = "f32"):
+        self.precision = check_precision(precision)
+        self.X = round_to_tile(X_local, precision)
         self.kernel = kernel
         self.gids = gids
         self.rank = rank
@@ -222,7 +243,11 @@ class ShardedGram:
         return self.kernel.diag(sel.X)
 
     def apply_update(self, f: Array, sel: Selection, delta: Array) -> Array:
-        # Rank-2P update of the local rows only — no communication.
+        # Rank-2P update of the local rows only — no communication. Same
+        # tile cast as the local providers: self.X is rounded here, and
+        # sel.X carries rows the selector gathered from the SAME rounded
+        # shard data (the distributed facade rounds X_local once, before
+        # building provider and selector).
         return f + self.kernel.rows(self.X, sel.X) @ delta
 
     def scatter(self, gamma: Array, sel: Selection, delta: Array) -> Array:
@@ -233,13 +258,14 @@ class ShardedGram:
 
 
 def make_provider(gram_mode: str, X: Array, kernel: KernelFn,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, precision: str = "f32"):
     """Build a local provider by name ("sharded" is constructed explicitly
     by the distributed facade — it needs the shard topology)."""
     if gram_mode == "precomputed":
-        return PrecomputedGram(X, kernel)
+        return PrecomputedGram(X, kernel, precision=precision)
     if gram_mode == "on_the_fly":
-        return OnTheFlyGram(X, kernel)
+        return OnTheFlyGram(X, kernel, precision=precision)
     if gram_mode == "pallas":
-        return PallasGram(X, kernel, interpret=interpret)
+        return PallasGram(X, kernel, interpret=interpret,
+                          precision=precision)
     raise ValueError(f"unknown gram_mode {gram_mode!r}")

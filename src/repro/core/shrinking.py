@@ -40,6 +40,7 @@ from repro.core.engine.gram import SINGLE_PASS_MAX, raw_scores_blocked
 from repro.core.engine.stats import violation as _violation
 from repro.core.engine.types import SMOResult
 from repro.core.ocssvm import OCSSVMModel, SlabSpec, recover_rhos
+from repro.kernels.precision import round_to_tile
 
 Array = jax.Array
 
@@ -61,6 +62,7 @@ def solve_blocked_shrinking(
     P: int = 8,
     gram_mode: str = "on_the_fly",
     interpret: Optional[bool] = None,
+    precision: str = "f32",
     tol: float = 1e-4,
     warm_iters: int = 200,
     max_rounds: int = 8,
@@ -76,15 +78,21 @@ def solve_blocked_shrinking(
     if max_outer is not None:
         round_iters = min(round_iters, max_outer)
     m, d = X.shape
-    Xf = jnp.asarray(X, jnp.float32)
+    X32 = jnp.asarray(X, jnp.float32)
+    # Tile-round once up front: the repack driver's own KKT sweeps and
+    # f_offset folds then see exactly the rows the inner low-precision
+    # solves see (for "f32" this is the plain f32 cast). The RETURNED
+    # model still carries the unrounded X32 — precision is an execution
+    # detail of the solve, and every facade returns the same model data.
+    Xf = round_to_tile(X32, precision)
     kernel = spec.kernel
     hi, lo = spec.upper(m), spec.lower(m)
     bnd = 1e-8 * (hi - lo)
 
     def _solve(Xs, sp, **kw):
         return solve_blocked(Xs, sp, P=P, gram_mode=gram_mode,
-                             interpret=interpret, tol=tol,
-                             patience=patience, **kw)
+                             interpret=interpret, precision=precision,
+                             tol=tol, patience=patience, **kw)
 
     # Phase 1: bounded full-set warm solve.
     res = _solve(Xf, spec, max_outer=warm_iters, gamma0=gamma0)
@@ -150,7 +158,7 @@ def solve_blocked_shrinking(
     dn_ok = gamma > lo + bnd
     gap = (jnp.max(jnp.where(dn_ok, f, -jnp.inf))
            - jnp.min(jnp.where(up_ok, f, jnp.inf)))
-    model = OCSSVMModel(gamma=gamma, rho1=rho1, rho2=rho2, X=Xf, spec=spec)
+    model = OCSSVMModel(gamma=gamma, rho1=rho1, rho2=rho2, X=X32, spec=spec)
     return SMOResult(model=model, iters=jnp.asarray(total_iters),
                      n_viol=jnp.sum(v > tol).astype(jnp.int32),
                      max_viol=jnp.max(v), gap=gap,

@@ -48,6 +48,7 @@ def solve(
     gram_mode: str = "precomputed",
     selection: str = "paper",
     interpret: Optional[bool] = None,
+    precision: str = "f32",
     tol: float = 1e-4,
     max_iters: int = 200_000,
     patience: int = 20,
@@ -60,10 +61,12 @@ def solve(
     concrete kernel parameters, so gram_mode="pallas" hashes a
     concretized spec as a static argument instead. ``interpret``
     force-overrides the Pallas provider's interpret-mode autodetection
-    (None -> interpret off-TPU).
+    (None -> interpret off-TPU). ``precision`` ("f32"/"bf16"/"f16") is
+    the Gram tile-input dtype (``repro.kernels.precision``).
     """
     kw = dict(gram_mode=gram_mode, selection=selection, interpret=interpret,
-              tol=tol, max_iters=max_iters, patience=patience, gamma0=gamma0)
+              precision=precision, tol=tol, max_iters=max_iters,
+              patience=patience, gamma0=gamma0)
     if gram_mode == "pallas":
         return _solve_static(X, concrete_spec(spec), **kw)
     return _solve_traced(X, spec, **kw)
@@ -76,6 +79,7 @@ def _solve_impl(
     gram_mode: str,
     selection: str,
     interpret: Optional[bool],
+    precision: str,
     tol: float,
     max_iters: int,
     patience: int,
@@ -89,7 +93,7 @@ def _solve_impl(
              else gamma0.astype(jnp.float32))
 
     provider = engine.make_provider(gram_mode, Xf, spec.kernel,
-                                    interpret=interpret)
+                                    interpret=interpret, precision=precision)
     selector = engine.make_selector(selection, provider, P=1, hi=hi, lo=lo,
                                     m=m, tol=tol)
     stats_fn = partial(engine.solver_stats_fresh, hi=hi, lo=lo, m=m, tol=tol)
@@ -106,8 +110,8 @@ def _solve_impl(
                                                     tol))
 
 
-_SOLVE_STATIC = ("gram_mode", "selection", "interpret", "tol", "max_iters",
-                 "patience")
+_SOLVE_STATIC = ("gram_mode", "selection", "interpret", "precision", "tol",
+                 "max_iters", "patience")
 _solve_traced = partial(jax.jit, static_argnames=_SOLVE_STATIC)(_solve_impl)
 _solve_static = partial(jax.jit,
                         static_argnames=_SOLVE_STATIC + ("spec",))(_solve_impl)

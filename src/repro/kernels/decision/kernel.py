@@ -7,6 +7,12 @@ per query tile; D is kept resident (the OCSSVM feature dim is small —
 d_model-sized at most after the head pooling).
 
 Grid: (NQ/TM, M/TN), j innermost.
+
+Mixed precision: the q / t data tiles may arrive in bf16/f16 (ops.py casts
+queries per request; the support block is packed in the serving dtype once
+at model-pack time); ``dot_general`` accumulates via
+``preferred_element_type=jnp.float32`` and gamma, the norms, the VMEM
+accumulator and the slab epilogue stay f32.
 """
 from __future__ import annotations
 

@@ -1,4 +1,11 @@
-"""Jit'd wrapper for the slab decision kernel."""
+"""Jit'd wrapper for the slab decision kernel.
+
+``precision`` casts the query/support data tiles to bf16/f16 before the
+kernel (the support set is the serving HBM bill); gamma, the norms, the
+accumulator and the slab epilogue ``(s - rho1) * (rho2 - s)`` stay f32
+(see ``repro.kernels.precision``). On the packed fast path the support
+block is stored in the serving dtype once, at model-pack time.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -9,11 +16,14 @@ import jax.numpy as jnp
 from repro.core.kernel_fn import KernelFn
 from repro.kernels.gram.ops import _auto_interpret, _pad_to
 from repro.kernels.decision.kernel import decision_pallas
+from repro.kernels.precision import tile_dtype
 
 
-@partial(jax.jit, static_argnames=("kernel", "tm", "tn", "interpret"))
+@partial(jax.jit, static_argnames=("kernel", "tm", "tn", "interpret",
+                                   "precision"))
 def decision(q, t, gamma_vec, rho1, rho2, kernel: KernelFn, *,
-             tm: int = 256, tn: int = 512, interpret: bool | None = None):
+             tm: int = 256, tn: int = 512, interpret: bool | None = None,
+             precision: str = "f32"):
     """Slab decision values for queries q against support set (t, gamma).
 
     Padding: extra training rows get gamma = 0 (no contribution); extra
@@ -22,12 +32,15 @@ def decision(q, t, gamma_vec, rho1, rho2, kernel: KernelFn, *,
     """
     if interpret is None:
         interpret = _auto_interpret()
+    dt = tile_dtype(precision)
     nq = q.shape[0]
-    q = _pad_to(_pad_to(q.astype(jnp.float32), tm, 0), 128, 1)
-    t = _pad_to(_pad_to(t.astype(jnp.float32), tn, 0), 128, 1)
+    q = _pad_to(_pad_to(q.astype(jnp.float32), tm, 0), 128, 1).astype(dt)
+    t = _pad_to(_pad_to(t.astype(jnp.float32), tn, 0), 128, 1).astype(dt)
     gv = _pad_to(gamma_vec.astype(jnp.float32)[:, None], tn, 0)
-    qn = jnp.sum(q * q, axis=-1, keepdims=True)
-    tn_ = jnp.sum(t * t, axis=-1, keepdims=True)
+    qf = q.astype(jnp.float32)
+    tf = t.astype(jnp.float32)
+    qn = jnp.sum(qf * qf, axis=-1, keepdims=True)
+    tn_ = jnp.sum(tf * tf, axis=-1, keepdims=True)
     rho = jnp.stack([jnp.asarray(rho1, jnp.float32),
                      jnp.asarray(rho2, jnp.float32)])[None, :]
     out = decision_pallas(q, t, gv, rho, qn, tn_, kind=kernel.name,
@@ -37,22 +50,27 @@ def decision(q, t, gamma_vec, rho1, rho2, kernel: KernelFn, *,
     return out[:nq, 0]
 
 
-@partial(jax.jit, static_argnames=("kernel", "tm", "tn", "interpret"))
+@partial(jax.jit, static_argnames=("kernel", "tm", "tn", "interpret",
+                                   "precision"))
 def decision_packed(q_pad, t_pad, gamma_pad, t_norms, rho1, rho2,
                     kernel: KernelFn, *, tm: int = 256, tn: int = 512,
-                    interpret: bool | None = None):
+                    interpret: bool | None = None, precision: str = "f32"):
     """Decision values against a support set already packed to the tile grid.
 
     The serving fast path: ``t_pad`` (M_pad, d_pad), ``gamma_pad``
     (M_pad, 1) and ``t_norms`` (M_pad, 1) were padded/precomputed once at
     model-compaction time (gamma is zero on padding rows, so they
     contribute nothing), and the query block arrives pre-padded to a
-    bucket shape — the per-request work is one ||q||^2 reduction plus the
-    kernel launch. Returns all ``q_pad.shape[0]`` values; the caller
+    bucket shape — the per-request work is one cast + ||q||^2 reduction
+    plus the kernel launch. ``t_pad`` is expected already in the serving
+    tile dtype (``pack_model`` stores it that way; the cast here is a
+    no-op then), ``t_norms`` is always f32 and was computed from the
+    rounded rows. Returns all ``q_pad.shape[0]`` values; the caller
     slices its live rows.
     """
     if interpret is None:
         interpret = _auto_interpret()
+    dt = tile_dtype(precision)
     if q_pad.shape[0] % tm or t_pad.shape[0] % tn or q_pad.shape[1] % 128:
         raise ValueError(
             f"decision_packed needs pre-padded operands: got q "
@@ -61,8 +79,10 @@ def decision_packed(q_pad, t_pad, gamma_pad, t_norms, rho1, rho2,
     if q_pad.shape[1] != t_pad.shape[1]:
         raise ValueError(f"feature-dim mismatch: q {q_pad.shape} vs "
                          f"t {t_pad.shape}")
-    q_pad = q_pad.astype(jnp.float32)
-    qn = jnp.sum(q_pad * q_pad, axis=-1, keepdims=True)
+    q_pad = q_pad.astype(jnp.float32).astype(dt)
+    t_pad = t_pad.astype(dt)
+    qf = q_pad.astype(jnp.float32)
+    qn = jnp.sum(qf * qf, axis=-1, keepdims=True)
     rho = jnp.stack([jnp.asarray(rho1, jnp.float32),
                      jnp.asarray(rho2, jnp.float32)])[None, :]
     out = decision_pallas(q_pad, t_pad, gamma_pad, rho, qn, t_norms,

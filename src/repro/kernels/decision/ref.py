@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the slab decision kernel."""
+"""Pure-jnp oracle for the slab decision kernel, dtype-parameterized."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,7 +7,9 @@ from repro.kernels.gram.ref import gram_ref
 
 
 def decision_ref(q, t, gamma_vec, rho1, rho2, *, kind: str,
-                 gamma: float = 1.0, coef0: float = 0.0, degree: int = 3):
+                 gamma: float = 1.0, coef0: float = 0.0, degree: int = 3,
+                 precision: str = "f32"):
     s = gram_ref(q, t, kind=kind, gamma=gamma, coef0=coef0,
-                 degree=degree) @ gamma_vec.astype(jnp.float32)
+                 degree=degree,
+                 precision=precision) @ gamma_vec.astype(jnp.float32)
     return (s - rho1) * (rho2 - s)

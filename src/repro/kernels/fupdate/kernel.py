@@ -11,6 +11,11 @@ This is the TPU-native replacement for the paper's per-row Gram cache: at
 turns the memory-bound AXPY of scalar SMO into an MXU matmul.
 
 Grid: (M/TM, D/TK), k innermost. VMEM: TM*TK + 2P*TK + TM*2P + TM floats.
+
+Mixed precision: the x / x_sel data tiles may arrive in bf16/f16 (ops.py
+casts them once — the X stream is the whole per-iteration HBM bill);
+``dot_general`` accumulates via ``preferred_element_type=jnp.float32`` and
+the norms, delta/f operands, scratch accumulator and epilogue stay f32.
 """
 from __future__ import annotations
 

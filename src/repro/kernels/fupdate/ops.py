@@ -1,4 +1,9 @@
-"""Jit'd wrapper for the fused SMO f-cache update."""
+"""Jit'd wrapper for the fused SMO f-cache update.
+
+``precision`` casts the streamed data tiles (x and the selected block) to
+bf16/f16; the delta/f operands, norms and the rank-2P matvec epilogue stay
+f32 (see ``repro.kernels.precision``).
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -9,11 +14,14 @@ import jax.numpy as jnp
 from repro.core.kernel_fn import KernelFn
 from repro.kernels.gram.ops import _auto_interpret, _pad_to
 from repro.kernels.fupdate.kernel import fupdate_pallas
+from repro.kernels.precision import tile_dtype
 
 
-@partial(jax.jit, static_argnames=("kernel", "tm", "tk", "interpret"))
+@partial(jax.jit, static_argnames=("kernel", "tm", "tk", "interpret",
+                                   "precision"))
 def fupdate(x, xsel, delta, f, kernel: KernelFn, *, tm: int = 512,
-            tk: int = 512, interpret: bool | None = None):
+            tk: int = 512, interpret: bool | None = None,
+            precision: str = "f32"):
     """f + k(x, xsel) @ delta.
 
     x: (m, d) training rows, xsel: (s, d) the selected pair block,
@@ -23,14 +31,18 @@ def fupdate(x, xsel, delta, f, kernel: KernelFn, *, tm: int = 512,
     """
     if interpret is None:
         interpret = _auto_interpret()
+    dt = tile_dtype(precision)
     m = x.shape[0]
-    x = _pad_to(_pad_to(x.astype(jnp.float32), tm, 0), tk, 1)
-    xsel = _pad_to(_pad_to(xsel.astype(jnp.float32), 128, 0), tk, 1)
+    x = _pad_to(_pad_to(x.astype(jnp.float32), tm, 0), tk, 1).astype(dt)
+    xsel = _pad_to(_pad_to(xsel.astype(jnp.float32), 128, 0),
+                   tk, 1).astype(dt)
     s = xsel.shape[0]
     delta = _pad_to(delta.astype(jnp.float32)[:, None], 128, 0)
     f2 = _pad_to(f.astype(jnp.float32)[:, None], tm, 0)
-    xn = jnp.sum(x * x, axis=-1, keepdims=True)
-    seln = jnp.sum(xsel * xsel, axis=-1, keepdims=True)
+    xf = x.astype(jnp.float32)
+    xsf = xsel.astype(jnp.float32)
+    xn = jnp.sum(xf * xf, axis=-1, keepdims=True)
+    seln = jnp.sum(xsf * xsf, axis=-1, keepdims=True)
     out = fupdate_pallas(x, xsel, delta, f2, xn, seln, kind=kernel.name,
                          gamma=kernel.gamma, coef0=kernel.coef0,
                          degree=kernel.degree, tm=tm, tk=tk,

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused f-cache update."""
+"""Pure-jnp oracle for the fused f-cache update, dtype-parameterized."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,7 +7,8 @@ from repro.kernels.gram.ref import gram_ref
 
 
 def fupdate_ref(x, xsel, delta, f, *, kind: str, gamma: float = 1.0,
-                coef0: float = 0.0, degree: int = 3):
+                coef0: float = 0.0, degree: int = 3,
+                precision: str = "f32"):
     krows = gram_ref(x, xsel, kind=kind, gamma=gamma, coef0=coef0,
-                     degree=degree)
+                     degree=degree, precision=precision)
     return f.astype(jnp.float32) + krows @ delta.astype(jnp.float32)

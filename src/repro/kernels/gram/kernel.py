@@ -9,6 +9,11 @@ VMEM — no second HBM pass.
 VMEM per step ~ TM*TK + TN*TK + TM*TN floats; defaults (256, 256, 512) give
 ~0.9 MB, comfortably inside the ~16 MB/core v5e VMEM with double buffering.
 All tile dims are multiples of 128 to keep MXU matmuls hardware-aligned.
+
+Mixed precision: the x/y data tiles may arrive in bf16/f16 (ops.py casts
+them once, halving the HBM stream); ``dot_general`` still accumulates via
+``preferred_element_type=jnp.float32``, and the norm operands, accumulator
+and epilogue are always f32 — only the streamed bytes shrink.
 """
 from __future__ import annotations
 

@@ -4,6 +4,11 @@ Pads inputs to tile multiples, dispatches to the Pallas kernel (interpret
 mode on non-TPU backends so the same code path is exercised on CPU), and
 slices the result back. Padding rows/features are zeros: they contribute 0
 to dot products and norms, and padded outputs are discarded by the slice.
+
+``precision`` ("f32" default, "bf16", "f16") casts the data tiles to the
+low-precision dtype before the kernel — halving the streamed bytes — while
+norms are computed in f32 from the rounded values and the dot products
+accumulate in f32 on the MXU (see ``repro.kernels.precision``).
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.kernel_fn import KernelFn
 from repro.kernels.gram.kernel import gram_pallas
+from repro.kernels.precision import tile_dtype
 
 
 def _pad_to(a, mult, axis):
@@ -41,17 +47,24 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("kernel", "tm", "tn", "tk", "interpret"))
+@partial(jax.jit, static_argnames=("kernel", "tm", "tn", "tk", "interpret",
+                                   "precision"))
 def gram(x, y, kernel: KernelFn, *, tm: int = 256, tn: int = 256,
-         tk: int = 512, interpret: bool | None = None):
+         tk: int = 512, interpret: bool | None = None,
+         precision: str = "f32"):
     """K[i, j] = k(x_i, y_j) via the tiled Pallas kernel."""
     if interpret is None:
         interpret = _auto_interpret()
+    dt = tile_dtype(precision)
     M, N = x.shape[0], y.shape[0]
-    x = _pad_to(_pad_to(x.astype(jnp.float32), tm, 0), tk, 1)
-    y = _pad_to(_pad_to(y.astype(jnp.float32), tn, 0), tk, 1)
-    xn = jnp.sum(x * x, axis=-1, keepdims=True)
-    yn = jnp.sum(y * y, axis=-1, keepdims=True)
+    x = _pad_to(_pad_to(x.astype(jnp.float32), tm, 0), tk, 1).astype(dt)
+    y = _pad_to(_pad_to(y.astype(jnp.float32), tn, 0), tk, 1).astype(dt)
+    # f32 norms of the *rounded* rows: keeps the RBF distance identity
+    # exact for the values the MXU actually sees.
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    xn = jnp.sum(xf * xf, axis=-1, keepdims=True)
+    yn = jnp.sum(yf * yf, axis=-1, keepdims=True)
     out = gram_pallas(x, y, xn, yn, kind=kernel.name, gamma=kernel.gamma,
                       coef0=kernel.coef0, degree=kernel.degree,
                       tm=tm, tn=tn, tk=tk, interpret=interpret)

@@ -1,13 +1,21 @@
-"""Pure-jnp oracle for the tiled Gram kernel."""
+"""Pure-jnp oracle for the tiled Gram kernel, dtype-parameterized.
+
+``precision`` applies the same tile-input rounding the Pallas kernel's
+low-precision stream sees (f32 -> bf16/f16 -> f32) and then computes
+everything in f32 — dot products of two 16-bit-mantissa values are exact
+in f32, so ref and kernel differ only by accumulation order.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.precision import round_to_tile
+
 
 def gram_ref(x, y, *, kind: str, gamma: float = 1.0, coef0: float = 0.0,
-             degree: int = 3):
-    x = x.astype(jnp.float32)
-    y = y.astype(jnp.float32)
+             degree: int = 3, precision: str = "f32"):
+    x = round_to_tile(x, precision)
+    y = round_to_tile(y, precision)
     dot = x @ y.T
     if kind == "linear":
         return dot

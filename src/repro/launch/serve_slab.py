@@ -52,6 +52,10 @@ def main(argv=None):
     ap.add_argument("--coalesce", type=int, default=8,
                     help="requests submitted per flush window")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--precision", choices=("f32", "bf16", "f16"),
+                    default="f32",
+                    help="Gram tile precision for fit AND the packed "
+                         "serving model (16-bit halves kernel HBM bytes)")
     ap.add_argument("--sharded-devices", type=int, default=0,
                     help="score through shard_map over this many devices "
                          "(needs >= that many jax devices)")
@@ -64,11 +68,12 @@ def main(argv=None):
     X, _ = make_toy(jax.random.PRNGKey(args.seed), args.m)
 
     t0 = time.perf_counter()
-    sm = repro.serve(X, spec, tol=args.tol, P=16)
+    sm = repro.serve(X, spec, tol=args.tol, P=16, precision=args.precision)
     cold_s = time.perf_counter() - t0
     cache = repro.serve.default_cache()
     print(f"serve: m={args.m} -> {sm.n_sv} SVs packed "
-          f"{tuple(sm.t_pad.shape)} in {cold_s*1e3:.0f} ms "
+          f"{tuple(sm.t_pad.shape)} [{args.precision}] in "
+          f"{cold_s*1e3:.0f} ms "
           f"(cache {cache.hits} hits / {cache.misses} misses)")
 
     if args.sharded_devices:
@@ -78,7 +83,9 @@ def main(argv=None):
               f"(axis 'data')")
     else:
         scorer = sm.scorer()
-        scorer.warmup()
+    # warmup pre-compiles the path this scorer will actually serve with
+    # (the shard_map executables when sharded)
+    scorer.warmup()
 
     rng = np.random.default_rng(args.seed)
     sizes = rng.integers(args.min_batch, args.max_batch + 1,
@@ -101,7 +108,8 @@ def main(argv=None):
 
     if args.json:
         with open(args.json, "w") as fh:
-            json.dump({"m": args.m, "n_sv": sm.n_sv, "cold_s": cold_s,
+            json.dump({"m": args.m, "n_sv": sm.n_sv,
+                       "precision": args.precision, "cold_s": cold_s,
                        "stream_s": stream_s, "requests": args.requests,
                        "queries": total_q,
                        "buckets": svc.stats_dict()}, fh, indent=2)

@@ -9,13 +9,23 @@ line) — so a cache miss does the expensive work exactly once:
 3. the SV block is padded to the Pallas decision kernel's tile grid and
    its row norms precomputed,
 
-and every later request for the same (spec, data, fit-kwargs) key gets
-the prepared ``ServingModel`` back without touching the solver. Keys use
-a content fingerprint of X (sampled above ``_HASH_SAMPLE_BYTES`` so
-fingerprinting a million-row set stays O(MB)), never object identity.
+and every later request for the same (spec, data, precision, fit-kwargs)
+key gets the prepared ``ServingModel`` back without touching the solver.
+Keys use a content fingerprint of X (sampled above ``_HASH_SAMPLE_BYTES``
+so fingerprinting a million-row set stays O(MB)), never object identity.
 
-The cache is process-local and thread-safe; multi-model registry /
-cross-process sharing are ROADMAP follow-ons.
+``precision`` ("f32" default / "bf16" / "f16") is threaded down through
+both the fit (Gram tile inputs) and the pack: the support block is stored
+in the serving tile dtype ONCE here, so the decision kernel streams
+16-bit support bytes with no per-request cast; norms are f32 of the
+rounded rows. Models packed at different precisions are different cache
+entries.
+
+The cache is process-local and thread-safe; concurrent misses on the
+same key coalesce onto one fit (per-key in-flight locks — the losers
+block until the winner's model is ready instead of re-running the
+solve). Multi-model registry / cross-process sharing are ROADMAP
+follow-ons.
 """
 from __future__ import annotations
 
@@ -31,6 +41,7 @@ import numpy as np
 
 from repro.core.ocssvm import (OCSSVMModel, SlabSpec, compact_support,
                                concrete_spec, with_quantile_offsets)
+from repro.kernels.precision import check_precision, tile_dtype
 
 Array = jax.Array
 
@@ -45,20 +56,24 @@ class ServingModel:
     """A fitted slab packed for the decision kernel, ready to score.
 
     ``model`` is the compacted reference (support rows only) whose
-    ``decision_function`` the scorer must match exactly; ``t_pad`` /
+    ``decision_function`` the scorer must match exactly (within the
+    documented precision tolerance when serving below f32); ``t_pad`` /
     ``gamma_pad`` / ``t_norms`` are the kernel operands, padded once to a
     multiple of ``tn`` rows and 128 features (zero-gamma padding rows
     contribute nothing, so a zero-SV model still serves — every query
-    scores ``(0 - rho1) * (rho2 - 0)``).
+    scores ``(0 - rho1) * (rho2 - 0)``). ``t_pad`` is stored in the
+    serving tile dtype (f32 / bf16 / f16 per ``precision``); gamma and
+    the precomputed norms are always f32.
     """
 
     model: OCSSVMModel
-    t_pad: Array        # (M_pad, d_pad) f32 support rows
+    t_pad: Array        # (M_pad, d_pad) support rows, serving tile dtype
     gamma_pad: Array    # (M_pad, 1) f32, zero beyond n_sv
-    t_norms: Array      # (M_pad, 1) f32 precomputed ||t||^2
+    t_norms: Array      # (M_pad, 1) f32 precomputed ||t||^2 (rounded rows)
     n_sv: int
     tn: int
     spec: SlabSpec      # concretized (hashable) spec
+    precision: str = "f32"
     fit_iters: int = 0
     _scorer: Optional[object] = dataclasses.field(default=None, repr=False)
 
@@ -106,32 +121,47 @@ def _pad_rows_cols(a: np.ndarray, row_mult: int) -> np.ndarray:
 
 
 def pack_model(model: OCSSVMModel, *, sv_threshold: float = 1e-7,
-               tn: int = 512) -> ServingModel:
-    """Compact a fitted model to SVs and pack it for ``decision_packed``."""
+               tn: int = 512, precision: str = "f32") -> ServingModel:
+    """Compact a fitted model to SVs and pack it for ``decision_packed``.
+
+    ``precision`` picks the serving tile dtype: the SV block is cast to
+    it HERE, once (numpy has no bfloat16, so the cast happens on the jnp
+    side), and the f32 norms are computed from the *rounded* rows so the
+    kernel's RBF distance identity holds exactly for the bytes it streams.
+    """
+    check_precision(precision)
     spec = concrete_spec(model.spec)
     compact = compact_support(model._replace(spec=spec),
                               threshold=sv_threshold)
     n_sv = int(compact.X.shape[0])
     sv = np.asarray(compact.X, np.float32)
-    t_pad = _pad_rows_cols(sv, tn)
+    t_pad = jnp.asarray(_pad_rows_cols(sv, tn)).astype(tile_dtype(precision))
+    tf = t_pad.astype(jnp.float32)
+    t_norms = jnp.sum(tf * tf, axis=-1, keepdims=True)
     gamma_pad = np.zeros((t_pad.shape[0], 1), np.float32)
     gamma_pad[:n_sv, 0] = np.asarray(compact.gamma, np.float32)
-    t_norms = np.sum(t_pad * t_pad, axis=-1, keepdims=True)
-    return ServingModel(model=compact, t_pad=jnp.asarray(t_pad),
+    return ServingModel(model=compact, t_pad=t_pad,
                         gamma_pad=jnp.asarray(gamma_pad),
-                        t_norms=jnp.asarray(t_norms), n_sv=n_sv, tn=tn,
-                        spec=spec)
+                        t_norms=t_norms, n_sv=n_sv, tn=tn,
+                        spec=spec, precision=precision)
 
 
 def fingerprint_array(X) -> Tuple:
-    """Content key for a training set: (shape, dtype, sha1 of a sample)."""
-    a = np.ascontiguousarray(np.asarray(X))
-    if a.nbytes > _HASH_SAMPLE_BYTES:
-        stride = max(1, a.shape[0] * a.itemsize * max(1, a[0].size)
-                     // _HASH_SAMPLE_BYTES)
-        sample = np.ascontiguousarray(a[::stride])
-    else:
-        sample = a
+    """Content key for a training set: (shape, dtype, sha1 of a sample).
+
+    Layout-invariant: ``tobytes()`` serializes the *logical* (C-order)
+    contents, so a Fortran-ordered or strided view fingerprints equal to
+    its contiguous copy — and no explicit contiguous copy is ever made.
+    0-d arrays are hashed whole (sampling needs an axis to stride);
+    above ``_HASH_SAMPLE_BYTES`` an evenly strided leading-axis sample
+    is hashed instead, with ``stride = ceil(nbytes / budget)`` so the
+    sampled bytes stay within budget regardless of row width.
+    """
+    a = np.asarray(X)
+    sample = a
+    if a.ndim >= 1 and a.nbytes > _HASH_SAMPLE_BYTES:
+        stride = -(-a.nbytes // _HASH_SAMPLE_BYTES)   # ceil division
+        sample = a[::stride]
     digest = hashlib.sha1(sample.tobytes()).hexdigest()
     return (a.shape, str(a.dtype), digest)
 
@@ -152,18 +182,37 @@ def _kwarg_key(v) -> Tuple:
     return ("repr", repr(v))
 
 
+class _InFlight:
+    """One in-progress fit: losers of the miss race block on ``done``."""
+
+    __slots__ = ("done", "result", "exc")
+
+    def __init__(self):
+        self.done = threading.Event()
+        self.result: Optional[ServingModel] = None
+        self.exc: Optional[BaseException] = None
+
+
 class ModelCache:
-    """LRU warm-model cache: key = (spec, X fingerprint, fit/pack kwargs).
+    """LRU warm-model cache: key = (spec, X fingerprint, precision,
+    fit/pack kwargs).
 
     ``get_or_fit`` is the only entry point; misses fit + pack under the
     per-key cost, hits return the prepared ``ServingModel`` (with its
     memoized scorer and therefore its already-compiled bucket
-    executables). ``hits`` / ``misses`` feed the serving benchmark.
+    executables). Concurrent misses on the SAME key coalesce: the first
+    caller runs the fit, later callers block on its in-flight entry and
+    get the same model (counted as hits — they never touched the
+    solver). If the fit raises, waiters retry the race so the next
+    caller becomes the fitter instead of caching the failure.
+    ``hits`` / ``misses`` feed the serving benchmark.
     """
 
     def __init__(self, maxsize: int = 8):
         self.maxsize = maxsize
         self._entries: OrderedDict = OrderedDict()
+        self._inflight: dict = {}
+        self._gen = 0           # bumped by clear(): stale fits don't insert
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -172,49 +221,88 @@ class ModelCache:
         return len(self._entries)
 
     def clear(self) -> None:
+        """Empty the cache and counters. Fits already in flight cannot be
+        cancelled, but they complete into the PRE-clear generation: their
+        waiters still get a model, and nothing re-appears in the cleared
+        cache."""
         with self._lock:
             self._entries.clear()
+            self._inflight.clear()
+            self._gen += 1
             self.hits = 0
             self.misses = 0
 
     def get_or_fit(self, X, spec: Optional[SlabSpec] = None, *,
                    offsets: str = "paper", sv_threshold: float = 1e-7,
-                   tn: int = 512, **fit_kwargs) -> ServingModel:
+                   tn: int = 512, precision: str = "f32",
+                   **fit_kwargs) -> ServingModel:
         """Return a warm ``ServingModel``, fitting on miss.
 
         offsets: "paper" keeps the solver's margin-SV rho recovery;
         "quantile" applies ``with_quantile_offsets`` (the usable-slab
-        variant) before compaction. Extra kwargs flow to ``repro.fit``
-        and take part in the cache key.
+        variant) before compaction. precision: the one knob for the
+        whole pipeline — forwarded to ``repro.fit`` (training Gram
+        tiles) AND used to pack the support block for serving; part of
+        the cache key. Extra kwargs flow to ``repro.fit`` and take part
+        in the cache key.
         """
         if spec is None:
             spec = SlabSpec()
         if offsets not in ("paper", "quantile"):
             raise ValueError(f"unknown offsets {offsets!r}; "
                              "expected 'paper' or 'quantile'")
+        check_precision(precision)
         key = (spec_key(spec), fingerprint_array(X), offsets, sv_threshold,
-               tn, tuple(sorted((k, _kwarg_key(v)) for k, v in
-                                fit_kwargs.items())))
+               tn, precision,
+               tuple(sorted((k, _kwarg_key(v)) for k, v in
+                            fit_kwargs.items())))
+
+        while True:
+            with self._lock:
+                if key in self._entries:
+                    self.hits += 1
+                    self._entries.move_to_end(key)
+                    return self._entries[key]
+                flight = self._inflight.get(key)
+                if flight is None:
+                    flight = self._inflight[key] = _InFlight()
+                    self.misses += 1
+                    gen = self._gen
+                    break   # this thread owns the fit
+            flight.done.wait()
+            if flight.exc is None and flight.result is not None:
+                with self._lock:
+                    self.hits += 1
+                return flight.result
+            # the fitter failed: loop and race to become the next fitter
+
+        try:
+            from repro.api import fit
+            res = fit(X, spec, precision=precision, **fit_kwargs)
+            model = res.model
+            if offsets == "quantile":
+                model = with_quantile_offsets(model)
+            served = pack_model(model, sv_threshold=sv_threshold, tn=tn,
+                                precision=precision)
+            served.fit_iters = int(res.iters)
+        except BaseException as e:
+            with self._lock:
+                if self._inflight.get(key) is flight:
+                    self._inflight.pop(key)
+            flight.exc = e
+            flight.done.set()
+            raise
+
         with self._lock:
-            if key in self._entries:
-                self.hits += 1
+            if self._gen == gen:   # clear() since the miss -> don't insert
+                self._entries[key] = served
                 self._entries.move_to_end(key)
-                return self._entries[key]
-            self.misses += 1
-
-        from repro.api import fit
-        res = fit(X, spec, **fit_kwargs)
-        model = res.model
-        if offsets == "quantile":
-            model = with_quantile_offsets(model)
-        served = pack_model(model, sv_threshold=sv_threshold, tn=tn)
-        served.fit_iters = int(res.iters)
-
-        with self._lock:
-            self._entries[key] = served
-            self._entries.move_to_end(key)
-            while len(self._entries) > self.maxsize:
-                self._entries.popitem(last=False)
+                while len(self._entries) > self.maxsize:
+                    self._entries.popitem(last=False)
+            if self._inflight.get(key) is flight:
+                self._inflight.pop(key)
+        flight.result = served
+        flight.done.set()
         return served
 
 
@@ -231,8 +319,10 @@ def serve(X, spec: Optional[SlabSpec] = None, *,
     """Train-then-serve in one engine composition: a warm ``ServingModel``.
 
     ``repro.serve(X, spec).score(q)`` is the whole serving story; kwargs
-    flow to ``ModelCache.get_or_fit`` (offsets/sv_threshold/tn) and on to
-    ``repro.fit`` (strategy, gram_mode, interpret, tol, ...).
+    flow to ``ModelCache.get_or_fit`` (offsets/sv_threshold/tn/precision)
+    and on to ``repro.fit`` (strategy, gram_mode, interpret, tol, ...).
+    ``precision="bf16"`` halves both the training and the serving kernel
+    HBM streams (see docs/serving.md, "Precision").
     """
     if cache is None:   # not `or`: an empty cache is len()==0 falsy
         cache = _DEFAULT_CACHE

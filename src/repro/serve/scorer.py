@@ -13,6 +13,10 @@ Two execution paths share the packing:
   queries are row-sharded, the packed support set is replicated, and no
   collective is needed (each shard owns its output rows) — pod-scale
   batches cost one kernel launch per shard.
+
+Both paths score at the model's packed ``precision``: the support block
+is already stored in the serving tile dtype, queries are cast per launch,
+and the accumulate/epilogue stays f32 (``repro.kernels.precision``).
 """
 from __future__ import annotations
 
@@ -98,7 +102,8 @@ class BatchScorer:
         return decision_packed(q_pad, m.t_pad, m.gamma_pad, m.t_norms,
                                m.rho1, m.rho2, m.spec.kernel,
                                tm=self._tm(q_pad.shape[0]), tn=m.tn,
-                               interpret=self.interpret)
+                               interpret=self.interpret,
+                               precision=m.precision)
 
     def chunk_rows(self) -> int:
         """Rows one launch can take: the top bucket, times the data-axis
@@ -107,9 +112,22 @@ class BatchScorer:
             else 1
         return BUCKETS[-1] * nd
 
-    def launches_for(self, n: int) -> int:
-        """Kernel launches a single n-row request will cost."""
-        return max(1, -(-n // self.chunk_rows()))
+    def bucket_used(self, n: int) -> int:
+        """The padding bucket one single-launch n-row request lands in —
+        the per-shard bucket on the sharded path (that is what keys the
+        compiled executable and therefore the stats)."""
+        if self.mesh is not None:
+            nd = int(self.mesh.shape[self.data_axis])
+            return bucket_for(max(1, -(-n // nd)))
+        return bucket_for(n)
+
+    def launch_plan(self, n: int):
+        """(rows, bucket) per kernel launch for an n-row request — full
+        top-capacity chunks first, then the remainder in its own (often
+        smaller) bucket. Single source for the service's stats keys."""
+        cap = self.chunk_rows()
+        sizes = [cap] * (n // cap) + ([n % cap] if n % cap else [])
+        return [(rows, self.bucket_used(rows)) for rows in sizes]
 
     def score(self, q) -> Array:
         """Slab decision values (n, d) -> (n,); every shape hits a cached
@@ -144,7 +162,8 @@ class BatchScorer:
             return decision_packed(qs, m.t_pad, m.gamma_pad, m.t_norms,
                                    m.rho1, m.rho2, m.spec.kernel,
                                    tm=self._tm(per_shard), tn=m.tn,
-                                   interpret=self.interpret)
+                                   interpret=self.interpret,
+                                   precision=m.precision)
 
         fn = shard_map(shard_fn, mesh=mesh,
                        in_specs=(P(self.data_axis, None),),
@@ -154,7 +173,17 @@ class BatchScorer:
         return out[:n]
 
     def warmup(self) -> None:
-        """Pre-compile every bucket executable (cold-start control)."""
+        """Pre-compile every bucket executable the scorer will serve with.
+
+        Warms the path ``score()`` actually takes: with ``mesh`` set that
+        is the ``shard_map``'d executable (one per per-shard bucket) —
+        warming the local bucket programs instead would leave exactly the
+        pod-scale path cold on its first real request. Each warm request
+        is sized so ``_score_once`` lands on per-shard bucket ``b``
+        (``b * n_devices`` rows sharded == ``b`` rows local).
+        """
+        nd = int(self.mesh.shape[self.data_axis]) if self.mesh is not None \
+            else 1
         for b in BUCKETS:
-            jax.block_until_ready(
-                self._score_bucket(jnp.zeros((b, self._d_pad), jnp.float32)))
+            q = jnp.zeros((b * nd, self.model.d), jnp.float32)
+            jax.block_until_ready(self._score_once(q))

@@ -15,12 +15,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-from repro.serve.scorer import BUCKETS, BatchScorer, bucket_for
+from repro.serve.scorer import BUCKETS, BatchScorer
 
 
 @dataclasses.dataclass
@@ -82,7 +83,9 @@ class ScoringService:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.scorer = scorer
         self.max_batch = max_batch
-        self._queue: List = []      # [(q, Pending)]
+        # deque: flush pops from the head per group — list.pop(0) is
+        # O(queue) per pop, O(n^2) to drain a deep queue.
+        self._queue: Deque[Tuple] = deque()   # [(q, Pending)]
         self.stats: Dict[int, BucketStats] = {}
 
     @property
@@ -90,8 +93,10 @@ class ScoringService:
         return sum(p.n for _, p in self._queue)
 
     def submit(self, q) -> Pending:
-        """Enqueue one request (n, d); returns its handle."""
+        """Enqueue one request (n, d), n >= 1; returns its handle."""
         self.scorer._check(q)
+        if int(q.shape[0]) < 1:
+            raise ValueError("need at least one query row per request")
         p = Pending(self, int(q.shape[0]))
         self._queue.append((q, p))
         return p
@@ -105,18 +110,20 @@ class ScoringService:
 
         Requests are grouped in arrival order until adding the next one
         would cross ``max_batch`` rows (an oversized single request forms
-        its own group and is chunked by the scorer into several
-        launches). Returns the number of kernel launches. Group rows are
-        concatenated host-side (requests arrive as host arrays at the
-        service boundary).
+        its own group; the service scores it chunk by chunk so each
+        launch is timed and filed under the bucket it actually used —
+        full chunks land in the top bucket, the remainder in its own,
+        possibly smaller, bucket). Returns the number of kernel
+        launches. Group rows are concatenated host-side (requests arrive
+        as host arrays at the service boundary).
         """
         launches = 0
         while self._queue:
-            group = [self._queue.pop(0)]
+            group = [self._queue.popleft()]
             rows = group[0][1].n
             while (self._queue
                    and rows + self._queue[0][1].n <= self.max_batch):
-                item = self._queue.pop(0)
+                item = self._queue.popleft()
                 group.append(item)
                 rows += item[1].n
 
@@ -125,18 +132,31 @@ class ScoringService:
             else:
                 batch = np.concatenate(
                     [np.asarray(q, np.float32) for q, _ in group])
-            t0 = time.perf_counter()
-            scores = self.scorer.score(batch)
-            jax.block_until_ready(scores)
-            dt = time.perf_counter() - t0
-            # An oversized single request is chunked inside the scorer:
-            # count its real kernel launches, filed under the top bucket
-            # (each full chunk is one top-bucket launch).
-            k = self.scorer.launches_for(rows)
-            launches += k
-            self.stats.setdefault(
-                bucket_for(rows), BucketStats()).record(rows, len(group),
-                                                        dt, launches=k)
+
+            # One scorer call per planned launch so every launch's
+            # wall-clock and rows are credited to the bucket that really
+            # served it (an oversized group spans several; the remainder
+            # chunk's bucket can be smaller than the top one). The
+            # group's request count is filed with the first launch — a
+            # request belongs to one group. The per-chunk sync is the
+            # price of honest per-launch timing: an oversized group pays
+            # one host-device round-trip per extra chunk, on a path that
+            # is already multiple full-bucket kernel launches deep.
+            plan = self.scorer.launch_plan(rows)
+            launches += len(plan)
+            parts = []
+            off = 0
+            for i, (chunk_rows, bucket) in enumerate(plan):
+                t0 = time.perf_counter()
+                part = self.scorer.score(batch[off:off + chunk_rows])
+                jax.block_until_ready(part)
+                dt = time.perf_counter() - t0
+                self.stats.setdefault(bucket, BucketStats()).record(
+                    chunk_rows, len(group) if i == 0 else 0, dt)
+                parts.append(part)
+                off += chunk_rows
+            scores = (parts[0] if len(parts) == 1
+                      else jax.numpy.concatenate(parts))
 
             off = 0
             for _, p in group:

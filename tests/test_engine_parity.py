@@ -140,3 +140,63 @@ def test_fit_kwargs_flow_across_strategies(toy):
     assert int(r2.iters) <= 50
     assert int(r3.iters) <= 50
     assert np.isfinite(float(r1.gap))
+
+
+@pytest.mark.parametrize("precision", ["bf16", "f16"])
+@pytest.mark.parametrize("gram_mode", PROVIDERS)
+def test_low_precision_providers_reach_qp(toy, gram_mode, precision):
+    """16-bit Gram tile inputs must not move the optimum beyond the
+    documented tolerance: the solve still reaches the f32 QP objective
+    (f32 accumulation keeps the dual well-conditioned; only the inputs
+    are rounded) and returns a feasible gamma."""
+    X, K, o_qp = toy
+    res = solve_blocked(X, SPEC, P=4, gram_mode=gram_mode,
+                        precision=precision, tol=1e-4)
+    assert _objective(res, K) == pytest.approx(o_qp, abs=5e-3)
+    g = res.model.gamma
+    assert float(jnp.sum(g)) == pytest.approx(SPEC.total(), abs=1e-4)
+    assert float(jnp.max(g)) <= SPEC.upper(M) + 1e-6
+    assert float(jnp.min(g)) >= SPEC.lower(M) - 1e-6
+
+
+def test_precision_f32_solve_bit_identical(toy):
+    """precision="f32" must leave the solver bit-for-bit unchanged."""
+    X, _, _ = toy
+    r0 = solve_blocked(X, SPEC, P=4, gram_mode="precomputed", tol=1e-4)
+    r1 = solve_blocked(X, SPEC, P=4, gram_mode="precomputed",
+                       precision="f32", tol=1e-4)
+    assert bool(jnp.all(r0.model.gamma == r1.model.gamma))
+    assert int(r0.iters) == int(r1.iters)
+
+
+def test_fit_threads_precision_to_provider(toy, monkeypatch):
+    """repro.fit(..., precision=...) must reach the provider layer for
+    every local strategy."""
+    from repro.core.engine import gram as engine_gram
+
+    seen = []
+    real = engine_gram.make_provider
+
+    def spying(gram_mode, X, kernel, interpret=None, precision="f32"):
+        seen.append(precision)
+        return real(gram_mode, X, kernel, interpret=interpret,
+                    precision=precision)
+
+    monkeypatch.setattr(engine_gram, "make_provider", spying)
+    # the facades bind engine.make_provider through the package namespace
+    import repro.core.engine as engine_pkg
+    monkeypatch.setattr(engine_pkg, "make_provider", spying)
+    X, _, _ = toy
+    for strategy in ("blocked", "mvp", "shrinking"):
+        seen.clear()
+        repro.fit(X, SPEC, strategy=strategy, precision="bf16", tol=1e-2,
+                  max_outer=40, **({"warm_iters": 20}
+                                   if strategy == "shrinking" else {}))
+        assert seen and all(p == "bf16" for p in seen), strategy
+
+
+def test_provider_rejects_unknown_precision(toy):
+    X, _, _ = toy
+    with pytest.raises(ValueError):
+        solve_blocked(X, SPEC, P=4, gram_mode="precomputed",
+                      precision="fp8", tol=1e-2)

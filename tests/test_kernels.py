@@ -1,5 +1,9 @@
 """Pallas kernel tests: shape/dtype sweeps, assert_allclose vs ref.py
-oracles, interpret=True (CPU) execution of the same BlockSpec tiling."""
+oracles, interpret=True (CPU) execution of the same BlockSpec tiling, and
+the mixed-precision parity matrix
+{f32, bf16, f16} x {gram, fupdate, decision_packed} x {rbf, linear, poly}
+(dtype-matched refs at tight tolerance; f32-truth at the documented
+per-dtype tolerance; precision="f32" bit-identical to the default path)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,9 +11,12 @@ import pytest
 
 from repro.core import linear, poly, rbf
 from repro.kernels import decision, fupdate, gram
+from repro.kernels.decision.ops import decision_packed
 from repro.kernels.decision.ref import decision_ref
 from repro.kernels.fupdate.ref import fupdate_ref
 from repro.kernels.gram.ref import gram_ref
+from repro.kernels.precision import (PRECISIONS, round_to_tile, tile_dtype,
+                                     truth_tolerance)
 
 KERNELS = [linear(), rbf(gamma=0.35), poly(gamma=0.2, coef0=1.0, degree=2)]
 SHAPES = [(16, 8, 3), (100, 50, 7), (256, 256, 64), (300, 130, 129),
@@ -88,3 +95,132 @@ def test_fupdate_zero_delta_is_identity():
     f = jax.random.normal(jax.random.PRNGKey(5), (128,), jnp.float32)
     out = fupdate(X, X[:4], jnp.zeros((4,)), f, kern, interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(f), atol=1e-6)
+
+
+# -- mixed-precision parity matrix ------------------------------------------
+# Each cell checks two things: (1) the Pallas kernel matches the
+# dtype-parameterized ref at near-f32 tolerance (both see identical input
+# rounding, so only accumulation order differs), and (2) the low-precision
+# output is within the DOCUMENTED per-dtype tolerance of f32 truth — the
+# bound docs/serving.md advertises.
+
+_MATRIX_TOL = dict(rtol=5e-4, atol=5e-4)
+
+
+def _matrix_data(m=200, n=130, d=70):
+    keys = jax.random.split(jax.random.PRNGKey(42), 4)
+    X = jax.random.normal(keys[0], (m, d), jnp.float32)
+    Y = jax.random.normal(keys[1], (n, d), jnp.float32)
+    gv = jax.random.normal(keys[2], (n,), jnp.float32) * 0.05
+    f = jax.random.normal(keys[3], (m,), jnp.float32)
+    return X, Y, gv, f
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_precision_matrix_gram(kern, precision):
+    X, Y, _, _ = _matrix_data()
+    out = gram(X, Y, kern, interpret=True, precision=precision)
+    ref = gram_ref(X, Y, kind=kern.name, gamma=kern.gamma,
+                   coef0=kern.coef0, degree=kern.degree,
+                   precision=precision)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_MATRIX_TOL)
+    truth = gram_ref(X, Y, kind=kern.name, gamma=kern.gamma,
+                     coef0=kern.coef0, degree=kern.degree)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(truth),
+                               **truth_tolerance(precision, truth))
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_precision_matrix_fupdate(kern, precision):
+    X, _, _, f = _matrix_data()
+    Xs = X[:6]
+    delta = jnp.linspace(-0.1, 0.1, 6, dtype=jnp.float32)
+    out = fupdate(X, Xs, delta, f, kern, interpret=True,
+                  precision=precision)
+    ref = fupdate_ref(X, Xs, delta[:, None], f[:, None], kind=kern.name,
+                      gamma=kern.gamma, coef0=kern.coef0,
+                      degree=kern.degree, precision=precision)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_MATRIX_TOL)
+    truth = fupdate_ref(X, Xs, delta[:, None], f[:, None], kind=kern.name,
+                        gamma=kern.gamma, coef0=kern.coef0,
+                        degree=kern.degree)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(truth),
+                               **truth_tolerance(precision, truth))
+
+
+def _pack_for_decision(t, gv, precision, tn=512):
+    """The pack_model layout at kernel level: t in the serving dtype,
+    gamma/norms f32, rows padded to tn, features to 128."""
+    m, d = t.shape
+    m_pad = -(-m // tn) * tn
+    d_pad = -(-d // 128) * 128
+    t_pad = jnp.zeros((m_pad, d_pad), jnp.float32).at[:m, :d].set(t)
+    t_pad = t_pad.astype(tile_dtype(precision))
+    tf = t_pad.astype(jnp.float32)
+    t_norms = jnp.sum(tf * tf, axis=-1, keepdims=True)
+    gamma_pad = jnp.zeros((m_pad, 1), jnp.float32).at[:m, 0].set(gv)
+    return t_pad, gamma_pad, t_norms, d_pad
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_precision_matrix_decision_packed(kern, precision):
+    X, Y, gv, _ = _matrix_data()
+    t_pad, gamma_pad, t_norms, d_pad = _pack_for_decision(Y, gv, precision)
+    nq = 100
+    q_pad = jnp.zeros((256, d_pad), jnp.float32).at[:nq, :X.shape[1]].set(
+        X[:nq])
+    out = decision_packed(q_pad, t_pad, gamma_pad, t_norms, 0.2, 0.8,
+                          kern, interpret=True, precision=precision)[:nq]
+    ref = decision_ref(X[:nq], Y, gv[:, None], 0.2, 0.8, kind=kern.name,
+                       gamma=kern.gamma, coef0=kern.coef0,
+                       degree=kern.degree, precision=precision)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_MATRIX_TOL)
+    truth = decision_ref(X[:nq], Y, gv[:, None], 0.2, 0.8, kind=kern.name,
+                         gamma=kern.gamma, coef0=kern.coef0,
+                         degree=kern.degree)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(truth),
+                               **truth_tolerance(precision, truth))
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+def test_precision_f32_bit_identical(kern):
+    """precision="f32" must be a no-op: bitwise-equal outputs on every
+    kernel family (guards the refactor and any future default change)."""
+    X, Y, gv, f = _matrix_data()
+    assert bool(jnp.all(
+        gram(X, Y, kern, interpret=True) ==
+        gram(X, Y, kern, interpret=True, precision="f32")))
+    delta = jnp.linspace(-0.1, 0.1, 6, dtype=jnp.float32)
+    assert bool(jnp.all(
+        fupdate(X, X[:6], delta, f, kern, interpret=True) ==
+        fupdate(X, X[:6], delta, f, kern, interpret=True,
+                precision="f32")))
+    assert bool(jnp.all(
+        decision(X, Y, gv, 0.2, 0.8, kern, interpret=True) ==
+        decision(X, Y, gv, 0.2, 0.8, kern, interpret=True,
+                 precision="f32")))
+
+
+def test_precision_rejects_unknown():
+    X, Y, _, _ = _matrix_data(m=16, n=16, d=8)
+    with pytest.raises(ValueError):
+        gram(X, Y, KERNELS[0], interpret=True, precision="tf32")
+    with pytest.raises(ValueError):
+        round_to_tile(X, "int8")
+
+
+def test_round_to_tile_halves_mantissa_not_values():
+    """bf16/f16 round-trips quantize; f32 is the identity."""
+    x = jnp.asarray([1.0, 1.0 + 2.0 ** -20, -3.14159], jnp.float32)
+    assert bool(jnp.all(round_to_tile(x, "f32") == x))
+    xb = round_to_tile(x, "bf16")
+    assert xb[1] == xb[0]                      # 2^-20 is below bf16 ulp
+    assert float(jnp.max(jnp.abs(xb - x))) <= 2.0 ** -8 * 3.2
+    xh = round_to_tile(x, "f16")
+    assert float(jnp.max(jnp.abs(xh - x))) <= 2.0 ** -11 * 3.2

@@ -77,15 +77,62 @@ def test_fit_interpret_forces_pallas_mode_small_m():
 
 
 def test_service_counts_chunked_launches(served):
-    """A single oversized request is several kernel launches; the
-    counters must say so."""
+    """A single oversized request is several kernel launches, and each
+    launch is filed under the bucket that actually served it: the full
+    chunk under the top bucket, the 70-row remainder under ITS bucket
+    (256), not lumped under the top one."""
     svc = ScoringService(served.scorer())
     n = BUCKETS[-1] + 70
     q = np.asarray(make_toy(jax.random.PRNGKey(88), n)[0])
     svc.submit(q)
     assert svc.flush() == 2
-    assert svc.stats[BUCKETS[-1]].batches == 2
-    assert svc.stats[BUCKETS[-1]].queries == n
+    top = svc.stats[BUCKETS[-1]]
+    rem = svc.stats[bucket_for(70)]
+    assert (top.batches, top.queries, top.requests) == (1, BUCKETS[-1], 1)
+    assert (rem.batches, rem.queries, rem.requests) == (1, 70, 0)
+    assert top.total_s > 0 and rem.total_s > 0
+
+
+def test_service_chunked_scatter_parity(served):
+    """Chunk-by-chunk scoring inside flush must still hand every handle
+    exactly its own rows."""
+    svc = ScoringService(served.scorer())
+    n = BUCKETS[-1] + 70
+    q = np.asarray(make_toy(jax.random.PRNGKey(89), n)[0])
+    h = svc.submit(q)
+    svc.flush()
+    np.testing.assert_allclose(np.asarray(h.result()), _ref(served, q),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_service_queue_is_deque():
+    """The queue must not be a list: list.pop(0) makes a deep drain
+    O(n^2)."""
+    from collections import deque
+    svc = ScoringService.__new__(ScoringService)
+    ScoringService.__init__(svc, scorer=_FakeScorer())
+    assert isinstance(svc._queue, deque)
+
+
+class _FakeScorer:
+    """Minimal stand-in so queue-structure tests need no fitted model."""
+
+    def _check(self, q):
+        pass
+
+    def chunk_rows(self):
+        return BUCKETS[-1]
+
+    def bucket_used(self, n):
+        return bucket_for(n)
+
+    def launch_plan(self, n):
+        cap = self.chunk_rows()
+        sizes = [cap] * (n // cap) + ([n % cap] if n % cap else [])
+        return [(r, bucket_for(r)) for r in sizes]
+
+    def score(self, q):
+        return jnp.zeros((q.shape[0],), jnp.float32)
 
 
 def test_scorer_device_array_input(served):
@@ -228,9 +275,9 @@ def test_fit_threads_interpret_to_pallas_provider(monkeypatch):
     seen = {}
     real = engine_gram.PallasGram.__init__
 
-    def spying_init(self, X, kernel, interpret=None):
+    def spying_init(self, X, kernel, interpret=None, precision="f32"):
         seen["interpret"] = interpret
-        real(self, X, kernel, interpret=interpret)
+        real(self, X, kernel, interpret=interpret, precision=precision)
 
     monkeypatch.setattr(engine_gram.PallasGram, "__init__", spying_init)
     X, _ = make_toy(jax.random.PRNGKey(5), M)
@@ -299,3 +346,231 @@ def test_sharded_scorer_matches_local():
     assert res["max_abs_diff"] < 1e-5
     assert res["big_n"] == 4 * 4096 + 60
     assert res["big_max_abs_diff"] < 1e-4
+
+
+# -- satellite regressions: herd / warmup / fingerprint / precision ---------
+
+def test_cache_thundering_herd_single_fit(monkeypatch):
+    """Two threads missing on the same key must run ONE fit: the loser
+    blocks on the winner's in-flight entry instead of fitting again."""
+    import threading
+    import time as _time
+
+    from repro import api
+
+    calls = {"n": 0}
+    real_fit = api.fit
+
+    def slow_fit(*args, **kwargs):
+        calls["n"] += 1
+        _time.sleep(0.5)        # long enough for both threads to race
+        return real_fit(*args, **kwargs)
+
+    monkeypatch.setattr(api, "fit", slow_fit)
+    cache = ModelCache()
+    X, _ = make_toy(jax.random.PRNGKey(5), 48)
+    results = {}
+    barrier = threading.Barrier(2)
+
+    def worker(name):
+        barrier.wait()
+        results[name] = cache.get_or_fit(X, SPEC, tol=1e-2, max_outer=50)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert calls["n"] == 1, "both threads ran the expensive fit"
+    assert results[0] is results[1]
+    assert cache.misses == 1 and cache.hits == 1
+
+
+def test_cache_failed_fit_not_cached(monkeypatch):
+    """A raising fit must not poison the key: the next caller re-fits."""
+    from repro import api
+
+    calls = {"n": 0}
+    real_fit = api.fit
+
+    def flaky_fit(*args, **kwargs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("boom")
+        return real_fit(*args, **kwargs)
+
+    monkeypatch.setattr(api, "fit", flaky_fit)
+    cache = ModelCache()
+    X, _ = make_toy(jax.random.PRNGKey(5), 48)
+    with pytest.raises(RuntimeError):
+        cache.get_or_fit(X, SPEC, tol=1e-2, max_outer=50)
+    sm = cache.get_or_fit(X, SPEC, tol=1e-2, max_outer=50)
+    assert calls["n"] == 2 and sm is not None
+    assert not cache._inflight
+
+
+def test_warmup_compiles_the_served_path(served, monkeypatch):
+    """warmup() must pre-compile the path score() will take: the sharded
+    (shard_map) executables when a mesh is set — NOT the local bucket
+    programs."""
+    from repro.serve.scorer import BatchScorer
+
+    mesh = jax.make_mesh((1,), ("data",))
+    calls = {"sharded": [], "local": 0}
+    real_sharded = BatchScorer._score_sharded
+
+    def spy_sharded(self, q, n):
+        calls["sharded"].append(n)
+        return real_sharded(self, q, n)
+
+    def spy_bucket(self, q_pad):
+        calls["local"] += 1
+        raise AssertionError("warmup with mesh hit the local bucket path")
+
+    monkeypatch.setattr(BatchScorer, "_score_sharded", spy_sharded)
+    monkeypatch.setattr(BatchScorer, "_score_bucket", spy_bucket)
+    scorer = served.scorer(mesh=mesh)
+    scorer.warmup()
+    # one warm request per bucket, each landing on that per-shard bucket
+    assert calls["sharded"] == list(BUCKETS)
+    assert calls["local"] == 0
+
+
+def test_warmup_local_matches_serving_buckets(served):
+    """Local warmup still covers every bucket and a post-warmup score
+    agrees with the reference."""
+    scorer = served.scorer()
+    scorer.warmup()
+    q, _ = make_toy(jax.random.PRNGKey(91), 65)
+    np.testing.assert_allclose(np.asarray(scorer.score(np.asarray(q))),
+                               _ref(served, q), rtol=2e-4, atol=2e-4)
+
+
+def test_fingerprint_array_edge_cases():
+    from repro.serve import fingerprint_array
+
+    # 0-d and 1-D inputs must fingerprint without tripping on a[0]
+    f0 = fingerprint_array(np.float32(3.0))
+    assert f0[0] == ()
+    f1 = fingerprint_array(np.arange(7, dtype=np.float32))
+    assert f1[0] == (7,)
+    assert f0 != f1
+
+    # same content, different layout -> equal fingerprints
+    a = np.arange(24, dtype=np.float32).reshape(4, 6)
+    fa = fingerprint_array(a)
+    assert fingerprint_array(np.asfortranarray(a)) == fa
+    wide = np.zeros((4, 12), np.float32)
+    wide[:, ::2] = a
+    b = wide[:, ::2]            # strided view, same logical content as a
+    assert not b.flags.c_contiguous
+    assert fingerprint_array(b) == fa
+    assert fingerprint_array(np.ascontiguousarray(b)) == fa
+
+    # different content / dtype / shape -> different fingerprints
+    assert fingerprint_array(a + 1) != fa
+    assert fingerprint_array(a.astype(np.float64)) != fa
+    assert fingerprint_array(a.reshape(6, 4)) != fa
+
+
+def test_fingerprint_array_sampling_above_budget(monkeypatch):
+    """Above the byte budget an evenly strided row sample is hashed; the
+    sample must still see content differences in sampled rows and be
+    layout-invariant."""
+    from repro.serve import model_cache
+
+    monkeypatch.setattr(model_cache, "_HASH_SAMPLE_BYTES", 1 << 10)
+    a = np.arange(4096, dtype=np.float32).reshape(256, 16)
+    fa = model_cache.fingerprint_array(a)
+    assert model_cache.fingerprint_array(np.asfortranarray(a)) == fa
+    b = a.copy()
+    b[0, 0] += 1.0          # row 0 is always in the sample
+    assert model_cache.fingerprint_array(b) != fa
+    # big 1-D inputs sample instead of hashing everything
+    v = np.arange(1 << 12, dtype=np.float32)
+    fv = model_cache.fingerprint_array(v)
+    assert fv[0] == ((1 << 12),)
+    assert model_cache.fingerprint_array(v * 0) != fv
+
+
+@pytest.mark.parametrize("precision", ["bf16", "f16"])
+def test_serving_precision_parity(precision):
+    """A model served at 16-bit tile precision must match the f32
+    reference within the documented per-dtype tolerance, and its packed
+    support block must actually be stored in the 16-bit dtype."""
+    from repro.kernels.precision import tile_dtype, truth_tolerance
+
+    X, _ = make_toy(jax.random.PRNGKey(5), M)
+    sm = repro.serve(X, SPEC, cache=ModelCache(), tol=1e-3,
+                     precision=precision)
+    assert sm.precision == precision
+    assert sm.t_pad.dtype == tile_dtype(precision)
+    q, _ = make_toy(jax.random.PRNGKey(11), 130)
+    out = np.asarray(sm.score(np.asarray(q)))
+    ref = _ref(sm, q)
+    np.testing.assert_allclose(out, ref, **truth_tolerance(precision, ref))
+
+
+def test_serving_precision_is_part_of_cache_key():
+    cache = ModelCache()
+    X, _ = make_toy(jax.random.PRNGKey(5), 48)
+    sm32 = cache.get_or_fit(X, SPEC, tol=1e-2, max_outer=50)
+    smbf = cache.get_or_fit(X, SPEC, tol=1e-2, max_outer=50,
+                            precision="bf16")
+    assert sm32 is not smbf
+    assert cache.misses == 2
+    assert sm32.t_pad.dtype == jnp.float32
+    assert smbf.t_pad.dtype == jnp.bfloat16
+    # same precision again -> hit
+    assert cache.get_or_fit(X, SPEC, tol=1e-2, max_outer=50,
+                            precision="bf16") is smbf
+    assert cache.hits == 1
+
+
+def test_serve_rejects_unknown_precision():
+    X, _ = make_toy(jax.random.PRNGKey(5), 32)
+    with pytest.raises(ValueError):
+        repro.serve(X, SPEC, cache=ModelCache(), precision="int8")
+
+
+def test_cache_clear_during_inflight_fit(monkeypatch):
+    """clear() while a fit is in flight: the fit's waiter still gets a
+    model, but nothing re-appears in the cleared cache."""
+    import threading
+    import time as _time
+
+    from repro import api
+
+    real_fit = api.fit
+    started = threading.Event()
+
+    def slow_fit(*args, **kwargs):
+        started.set()
+        _time.sleep(0.4)
+        return real_fit(*args, **kwargs)
+
+    monkeypatch.setattr(api, "fit", slow_fit)
+    cache = ModelCache()
+    X, _ = make_toy(jax.random.PRNGKey(5), 48)
+    out = {}
+
+    t = threading.Thread(
+        target=lambda: out.update(
+            sm=cache.get_or_fit(X, SPEC, tol=1e-2, max_outer=50)))
+    t.start()
+    started.wait(timeout=60)
+    cache.clear()
+    t.join(timeout=120)
+    assert out["sm"] is not None        # the in-flight caller got a model
+    assert len(cache) == 0              # ...but the cleared cache stayed empty
+    assert not cache._inflight
+
+
+def test_service_rejects_empty_request(served):
+    """A zero-row request must fail fast at submit time, not crash a
+    later flush with an unrelated concatenate error."""
+    svc = ScoringService(served.scorer())
+    with pytest.raises(ValueError):
+        svc.submit(np.zeros((0, served.d), np.float32))
+    assert not svc._queue
+    assert svc.flush() == 0

@@ -11,6 +11,11 @@ per-precision rows under ``per_precision`` in the BENCH JSON — the trend
 line for the 16-bit support-stream win (meaningful on TPU; the
 interpret-mode CPU numbers only track that the path stays wired).
 
+A two-model fleet (registry + deadline-aware admission controller) runs
+once at the lead precision and lands under ``multi_model`` in the JSON:
+per-model cold fit, deadline-driven stream throughput, per-model
+per-bucket stats, and a routing-parity spot check.
+
     PYTHONPATH=src python benchmarks/serving_latency.py [--reduced]
         [--precisions f32,bf16] [--json PATH]
 """
@@ -24,10 +29,11 @@ import jax
 import numpy as np
 
 import repro
-from repro.core import SlabSpec, rbf
+from repro.core import SlabSpec, linear, rbf
 from repro.data import make_toy
 from repro.kernels.precision import parse_precisions
-from repro.serve import ModelCache, ScoringService
+from repro.serve import (AdmissionController, ModelCache, ModelRegistry,
+                         ScoringService)
 
 BATCHES = (64, 256, 1024)
 
@@ -72,6 +78,67 @@ def run(m: int = 2000, batches=BATCHES, tol: float = 1e-3,
     }
 
 
+def run_multi_model(m: int = 500, requests: int = 16,
+                    deadline_ms: float = 20.0, tol: float = 1e-3,
+                    precision: str = "f32") -> dict:
+    """Two-model fleet through the registry + admission controller.
+
+    Measures the multi-model serving front-end end to end: per-model
+    cold fit (fit-on-first-use via the registry), then a deadline-driven
+    interleaved stream — every submit is followed by a ``poll()`` so
+    flushes happen exactly when deadline pressure (observed per-bucket
+    latency vs earliest deadline) says they must. Routing correctness is
+    spot-checked against each model's direct scorer.
+    """
+    X, _ = make_toy(jax.random.PRNGKey(0), m)
+    registry = ModelRegistry()
+    registry.register(
+        "slab-rbf", X,
+        SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5)),
+        tol=tol, P=16, precision=precision)
+    registry.register(
+        "slab-linear", X,
+        SlabSpec(nu1=0.3, nu2=0.05, eps=0.5, kernel=linear()),
+        tol=tol, P=16, precision=precision)
+    names = registry.names()
+
+    ctrl = AdmissionController(registry, max_wait_s=0.05)
+    cold = {}
+    for name in names:
+        t0 = time.perf_counter()
+        ctrl.service(name).scorer.warmup()      # fit + compile, once
+        cold[name] = time.perf_counter() - t0
+
+    handles = []
+    t0 = time.perf_counter()
+    for i in range(requests):
+        name = names[i % len(names)]
+        q = np.asarray(make_toy(jax.random.PRNGKey(200 + i),
+                                32 + 16 * (i % 5))[0])
+        handles.append((name, q, ctrl.submit(
+            name, q, deadline=ctrl.clock() + deadline_ms / 1e3)))
+        ctrl.poll()
+    ctrl.drain()
+    stream_s = time.perf_counter() - t0
+
+    max_err = 0.0
+    for name, q, h in handles[:4]:      # routing spot check, kept cheap
+        direct = np.asarray(registry.get(name).scorer().score(q))
+        max_err = max(max_err, float(np.max(np.abs(
+            np.asarray(h.result()) - direct))))
+    assert max_err < 1e-5, f"routing parity broke: {max_err}"
+
+    queries = sum(h.n for _, _, h in handles)
+    return {
+        "m": m, "precision": precision, "models": list(names),
+        "requests": requests, "queries": queries,
+        "deadline_ms": deadline_ms, "stream_s": stream_s,
+        "routing_max_abs_err": max_err,
+        "cold_s": cold,
+        "per_model": ctrl.stats_dict(),
+    }
+
+
 def _print_rows(res):
     print(f"serving,m={res['m']},n_sv={res['n_sv']},"
           f"precision={res['precision']},"
@@ -81,6 +148,17 @@ def _print_rows(res):
         print(f"serving_bucket,b={b},precision={res['precision']},"
               f"cold={res['cold_per_bucket_s'][b]*1e3:.1f}ms,"
               f"warm={res['warm_per_bucket_s'][b]*1e3:.1f}ms")
+
+
+def _print_multi_rows(res):
+    for name in res["models"]:
+        stats = res["per_model"][name]
+        served = sum(b["queries"] for b in stats["buckets"].values())
+        print(f"serving_multimodel,model={name},"
+              f"precision={res['precision']},"
+              f"cold={res['cold_s'][name]*1e3:.0f}ms,"
+              f"queries={served},rejected={stats['rejected']},"
+              f"routing_max_abs_err={res['routing_max_abs_err']:.2e}")
 
 
 def main(argv=None):
@@ -108,6 +186,13 @@ def main(argv=None):
     # trend consumers of BENCH_serving.json keep working
     res = dict(per_precision[precisions[0]])
     res["per_precision"] = per_precision
+
+    # multi-model registry + admission rows (once, at the lead precision)
+    multi_kwargs = (dict(m=300, requests=8) if args.reduced
+                    else dict(m=500, requests=16))
+    res["multi_model"] = run_multi_model(precision=precisions[0],
+                                         **multi_kwargs)
+    _print_multi_rows(res["multi_model"])
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(res, fh, indent=2)

@@ -127,7 +127,9 @@ def fit(
                          precision=precision, tol=tol, **kwargs)
 
 
-def serve(X: Array, spec: Optional[SlabSpec] = None, **kwargs):
+def serve(X: Optional[Array] = None, spec: Optional[SlabSpec] = None, *,
+          model: Optional[str] = None, registry=None,
+          quota: Optional[int] = None, **kwargs):
     """Train-then-serve: a warm ``ServingModel`` ready to ``score(q)``.
 
     The serving-side counterpart of ``fit``: hits the process-wide
@@ -138,6 +140,16 @@ def serve(X: Array, spec: Optional[SlabSpec] = None, **kwargs):
     sv_threshold=, tn=, precision=) and on to ``fit`` (strategy,
     interpret, tol, ...); ``precision="bf16"`` trains AND serves with
     16-bit Gram tile streams (f32 accumulate/epilogue).
+
+    ``model=`` switches on multi-model routing: with ``X`` the recipe is
+    registered under that name in ``registry`` (default: the
+    process-wide ``repro.serve.default_registry()``; idempotent — a
+    *different* recipe under the same name raises
+    ``DuplicateModelError``) and the registry's warm model comes back;
+    without ``X`` it is a pure name lookup (``UnknownModelError`` if
+    absent). ``quota=`` records the per-model admission budget the
+    ``AdmissionController`` enforces.
     """
-    from repro.serve.model_cache import serve as _serve
-    return _serve(X, spec, **kwargs)
+    from repro.serve.registry import serve as _serve
+    return _serve(X, spec, model=model, registry=registry, quota=quota,
+                  **kwargs)

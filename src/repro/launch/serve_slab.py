@@ -10,6 +10,12 @@ per-bucket latency/throughput counters.
     # pod-scale sharded scoring (forced host devices for a dry run):
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.serve_slab --sharded-devices 4
+
+    # multi-model: registry + deadline-aware admission windows (keep the
+    # quota strictly below --max-batch, or bucket fill drains the window
+    # before the quota can bind — the controller warns if it cannot)
+    PYTHONPATH=src python -m repro.launch.serve_slab \
+        --models a=rbf:0.5 --models b=linear --deadline-ms 20 --quota 256
 """
 from __future__ import annotations
 
@@ -24,15 +30,107 @@ import repro
 from repro.core import SlabSpec, linear, poly, rbf
 from repro.data import make_toy
 from repro.launch.mesh import make_test_mesh
-from repro.serve import ScoringService, run_request_stream
+from repro.serve import (AdmissionController, ModelRegistry,
+                         QuotaExceededError, ScoringService,
+                         run_request_stream)
+
+
+def _make_kernel(name: str, gamma: float):
+    if name == "linear":
+        return linear()
+    if name == "poly":
+        return poly(gamma=gamma, coef0=1.0, degree=2)
+    if name == "rbf":
+        return rbf(gamma=gamma)
+    raise ValueError(f"unknown kernel {name!r} (linear/rbf/poly)")
 
 
 def _kernel(args):
-    if args.kernel == "linear":
-        return linear()
-    if args.kernel == "poly":
-        return poly(gamma=args.gamma, coef0=1.0, degree=2)
-    return rbf(gamma=args.gamma)
+    return _make_kernel(args.kernel, args.gamma)
+
+
+def _parse_model_flag(flag: str, args) -> tuple:
+    """``NAME=KERNEL[:GAMMA[:NU1[:NU2[:EPS]]]]`` -> (name, SlabSpec).
+
+    Unspecified fields inherit the single-model CLI defaults, so
+    ``--models a=rbf:0.5 --models b=linear`` is a complete fleet spec.
+    """
+    name, sep, conf = flag.partition("=")
+    if not sep or not name or not conf:
+        raise ValueError(f"--models wants NAME=KERNEL[:GAMMA[:NU1[:NU2"
+                         f"[:EPS]]]], got {flag!r}")
+    parts = conf.split(":")
+    kernel_name = parts[0]
+    floats = [float(p) for p in parts[1:]]
+    gamma = floats[0] if len(floats) > 0 else args.gamma
+    nu1 = floats[1] if len(floats) > 1 else args.nu1
+    nu2 = floats[2] if len(floats) > 2 else args.nu2
+    eps = floats[3] if len(floats) > 3 else args.eps
+    return name, SlabSpec(nu1=nu1, nu2=nu2, eps=eps,
+                          kernel=_make_kernel(kernel_name, gamma))
+
+
+def _run_multi_model(args):
+    """Registry + admission-controller serving loop for ``--models``."""
+    X, _ = make_toy(jax.random.PRNGKey(args.seed), args.m)
+    registry = ModelRegistry()
+    for flag in args.models:
+        name, spec = _parse_model_flag(flag, args)
+        registry.register(name, X, spec, quota=args.quota, tol=args.tol,
+                          P=16, precision=args.precision)
+    names = registry.names()
+
+    ctrl = AdmissionController(registry, max_batch=args.max_batch,
+                               max_wait_s=args.max_wait_ms / 1e3)
+    t0 = time.perf_counter()
+    for name in names:
+        svc = ctrl.service(name)          # fit-on-first-use happens here
+        svc.scorer.warmup()
+        sm = registry.get(name)
+        print(f"model {name}: {sm.n_sv} SVs packed {tuple(sm.t_pad.shape)} "
+              f"[{args.precision}] quota={registry.quota(name)}")
+    print(f"fleet of {len(names)} models warm in "
+          f"{(time.perf_counter() - t0)*1e3:.0f} ms "
+          f"(cache {registry.cache.hits} hits / "
+          f"{registry.cache.misses} misses)")
+
+    rng = np.random.default_rng(args.seed)
+    sizes = rng.integers(args.min_batch, args.max_batch + 1,
+                         size=args.requests)
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms else None
+    handles, rejected = [], 0
+    t0 = time.perf_counter()
+    for i, n in enumerate(sizes):
+        q = np.asarray(make_toy(jax.random.PRNGKey(1000 + i), int(n))[0])
+        model = names[i % len(names)]
+        deadline = (ctrl.clock() + deadline_s) if deadline_s else None
+        try:
+            handles.append(ctrl.submit(model, q, deadline=deadline))
+        except QuotaExceededError:
+            rejected += 1
+        ctrl.poll()
+    ctrl.drain()
+    stream_s = time.perf_counter() - t0
+    served_q = sum(h.n for h in handles)
+    print(f"stream: {len(handles)}/{args.requests} requests admitted "
+          f"({rejected} over quota) / {served_q} queries in "
+          f"{stream_s*1e3:.0f} ms ({served_q/max(stream_s, 1e-9):.0f} q/s)")
+    for line in ctrl.stats_lines():
+        print("  " + line)
+
+    inside = sum(int((np.asarray(h.result()) >= 0).sum()) for h in handles)
+    print(f"decisions: {inside}/{served_q} inside the slab")
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"m": args.m, "models": list(names),
+                       "precision": args.precision,
+                       "deadline_ms": args.deadline_ms,
+                       "quota": args.quota, "stream_s": stream_s,
+                       "requests": args.requests, "admitted": len(handles),
+                       "rejected": rejected, "queries": served_q,
+                       "per_model": ctrl.stats_dict()}, fh, indent=2)
+        print(f"wrote {args.json}")
 
 
 def main(argv=None):
@@ -61,7 +159,23 @@ def main(argv=None):
                          "(needs >= that many jax devices)")
     ap.add_argument("--json", type=str, default=None,
                     help="also write the stats to this path as JSON")
+    ap.add_argument("--models", action="append", default=None,
+                    metavar="NAME=KERNEL[:GAMMA[:NU1[:NU2[:EPS]]]]",
+                    help="repeatable; switches on the multi-model "
+                         "registry + admission-controller path (e.g. "
+                         "--models a=rbf:0.5 --models b=linear)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for the admission windows "
+                         "(multi-model path; default: no deadlines)")
+    ap.add_argument("--quota", type=int, default=None,
+                    help="per-model admission quota in queued rows "
+                         "(multi-model path; default: unlimited)")
+    ap.add_argument("--max-wait-ms", type=float, default=50.0,
+                    help="age bound for deadline-less admission windows")
     args = ap.parse_args(argv)
+
+    if args.models:
+        return _run_multi_model(args)
 
     spec = SlabSpec(nu1=args.nu1, nu2=args.nu2, eps=args.eps,
                     kernel=_kernel(args))

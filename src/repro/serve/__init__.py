@@ -1,6 +1,6 @@
 """repro.serve — the serving subsystem: train-then-serve, one composition.
 
-Three layers, each usable on its own:
+Five layers, each usable on its own:
 
 * ``model_cache`` — warm-model cache keyed on (SlabSpec, data
   fingerprint); a miss fits via ``repro.fit`` and packs the support set
@@ -9,29 +9,47 @@ Three layers, each usable on its own:
   over the Pallas ``decision`` kernel so every request shape hits a
   cached executable; ``mesh=`` flips on the shard_map'd pod-scale path.
 * ``service``     — ``ScoringService``: micro-batching request loop with
-  per-bucket latency/throughput counters.
+  per-bucket latency/throughput counters on an injectable clock.
+* ``registry``    — ``ModelRegistry``: name -> recipe -> warm model
+  routing over the cache, with per-model admission quotas.
+* ``admission``   — ``AdmissionController``: deadline-aware coalescing
+  windows in front of ``ScoringService.flush``, typed quota rejection.
 
 The package itself is callable — ``repro.serve(X, spec)`` returns a warm
-``ServingModel`` from the default cache — so the one-line entry point
-and the subsystem share a single name (see ``_CallableModule`` below).
+``ServingModel`` from the default cache, and ``repro.serve(X, spec,
+model="tenant-a")`` routes through the default registry — so the
+one-line entry point and the subsystem share a single name (see
+``_CallableModule`` below).
 """
 from __future__ import annotations
 
 import sys as _sys
 import types as _types
 
+# model_cache must load first: it pulls repro.core (and through it the
+# kernel packages) in the one order that does not trip the
+# core <-> kernels import cycle — scorer/admission start from
+# repro.kernels directly, which only works once core is fully loaded.
 from repro.serve.model_cache import (ModelCache, ServingModel, default_cache,
-                                     fingerprint_array, pack_model, serve,
-                                     spec_key)
+                                     fingerprint_array, pack_model,
+                                     recipe_key, spec_key)
+from repro.serve.admission import (AdmissionController, AdmissionHandle,
+                                   QuotaExceededError)
+from repro.serve.registry import (DuplicateModelError, ModelRecipe,
+                                  ModelRegistry, RegistryError,
+                                  UnknownModelError, default_registry, serve)
 from repro.serve.scorer import BUCKETS, BatchScorer, bucket_for
 from repro.serve.service import (BucketStats, Pending, ScoringService,
                                  run_request_stream)
 
 __all__ = [
     "ModelCache", "ServingModel", "default_cache", "fingerprint_array",
-    "pack_model", "serve", "spec_key",
+    "pack_model", "recipe_key", "serve", "spec_key",
     "BUCKETS", "BatchScorer", "bucket_for",
     "BucketStats", "Pending", "ScoringService", "run_request_stream",
+    "DuplicateModelError", "ModelRecipe", "ModelRegistry", "RegistryError",
+    "UnknownModelError", "default_registry",
+    "AdmissionController", "AdmissionHandle", "QuotaExceededError",
 ]
 
 
@@ -41,7 +59,7 @@ class _CallableModule(_types.ModuleType):
     parent package (shadowing the lazy function ``repro.__getattr__``
     would otherwise return)."""
 
-    def __call__(self, X, spec=None, **kwargs):
+    def __call__(self, X=None, spec=None, **kwargs):
         return serve(X, spec, **kwargs)
 
 

@@ -24,8 +24,9 @@ entries.
 The cache is process-local and thread-safe; concurrent misses on the
 same key coalesce onto one fit (per-key in-flight locks — the losers
 block until the winner's model is ready instead of re-running the
-solve). Multi-model registry / cross-process sharing are ROADMAP
-follow-ons.
+solve). The multi-model registry (``repro.serve.registry``) layers
+name -> recipe routing on top of exactly these keys; cross-process
+sharing is a ROADMAP follow-on.
 """
 from __future__ import annotations
 
@@ -182,6 +183,32 @@ def _kwarg_key(v) -> Tuple:
     return ("repr", repr(v))
 
 
+def recipe_key(X, spec: Optional[SlabSpec] = None, *,
+               offsets: str = "paper", sv_threshold: float = 1e-7,
+               tn: int = 512, precision: str = "f32",
+               **fit_kwargs) -> Tuple:
+    """The full cache key for one serve recipe.
+
+    Everything that changes the fitted model or its packing takes part:
+    the concretized spec, the data fingerprint, the offset policy, the
+    pack shape, the precision, and every fit kwarg. ``get_or_fit`` keys
+    its entries with this, and the multi-model registry uses the same
+    tuple as recipe identity — so "same recipe" means "same cache entry"
+    by construction, and ``ModelCache.evict`` can drop exactly the entry
+    a registry name resolves to.
+    """
+    if spec is None:
+        spec = SlabSpec()
+    if offsets not in ("paper", "quantile"):
+        raise ValueError(f"unknown offsets {offsets!r}; "
+                         "expected 'paper' or 'quantile'")
+    check_precision(precision)
+    return (spec_key(spec), fingerprint_array(X), offsets, sv_threshold,
+            tn, precision,
+            tuple(sorted((k, _kwarg_key(v)) for k, v in
+                         fit_kwargs.items())))
+
+
 class _InFlight:
     """One in-progress fit: losers of the miss race block on ``done``."""
 
@@ -220,6 +247,35 @@ class ModelCache:
     def __len__(self) -> int:
         return len(self._entries)
 
+    def lookup(self, key: Tuple) -> Optional[ServingModel]:
+        """Warm-path getter by precomputed ``recipe_key``: the cached
+        model (counted as a hit, LRU recency refreshed) or None.
+
+        The registry stores each recipe's key at registration, so its
+        warm lookups skip ``get_or_fit``'s key recomputation — and with
+        it the O(bytes) re-fingerprint of the training data that would
+        otherwise tax every routed request. A miss counts nothing;
+        callers fall back to ``get_or_fit`` (which coalesces the fit).
+        """
+        with self._lock:
+            served = self._entries.get(key)
+            if served is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+            return served
+
+    def evict(self, key: Tuple) -> bool:
+        """Drop one entry by its ``recipe_key``; True iff it was cached.
+
+        A fit already in flight for the key is not cancelled — its
+        waiters still get a model, and it will complete into the cache
+        (the key wasn't invalidated, only its current entry dropped).
+        Models handed out earlier stay valid: eviction forgets the
+        cache's reference, it does not mutate the ``ServingModel``.
+        """
+        with self._lock:
+            return self._entries.pop(key, None) is not None
+
     def clear(self) -> None:
         """Empty the cache and counters. Fits already in flight cannot be
         cancelled, but they complete into the PRE-clear generation: their
@@ -248,14 +304,9 @@ class ModelCache:
         """
         if spec is None:
             spec = SlabSpec()
-        if offsets not in ("paper", "quantile"):
-            raise ValueError(f"unknown offsets {offsets!r}; "
-                             "expected 'paper' or 'quantile'")
-        check_precision(precision)
-        key = (spec_key(spec), fingerprint_array(X), offsets, sv_threshold,
-               tn, precision,
-               tuple(sorted((k, _kwarg_key(v)) for k, v in
-                            fit_kwargs.items())))
+        key = recipe_key(X, spec, offsets=offsets,
+                         sv_threshold=sv_threshold, tn=tn,
+                         precision=precision, **fit_kwargs)
 
         while True:
             with self._lock:

@@ -8,15 +8,20 @@ back to its handle. Per-bucket latency/throughput counters expose where
 the traffic actually lands (the launch CLI and the serving benchmark
 print them).
 
-Synchronous by design: admission control / async draining is a ROADMAP
-follow-on; this loop is the deterministic core both would reuse.
+Synchronous by design: this loop is the deterministic core the
+admission layer (``repro.serve.admission``) wraps — it decides *when*
+to flush, this class decides *what one flush does*. Time enters only
+through the injectable ``clock`` (default ``time.monotonic``), so
+every latency counter — and every policy built on top of them — is
+unit-testable with a fake clock and zero sleeps.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -34,9 +39,10 @@ class BucketStats:
     total_s: float = 0.0      # summed launch wall-clock
     last_s: float = 0.0
 
-    def record(self, queries: int, requests: int, dt: float,
-               launches: int = 1) -> None:
-        self.batches += launches
+    def record(self, queries: int, requests: int, dt: float) -> None:
+        """One launch's worth of accounting — flush records each kernel
+        launch individually, so a record IS a launch."""
+        self.batches += 1
         self.queries += queries
         self.requests += requests
         self.total_s += dt
@@ -78,15 +84,25 @@ class ScoringService:
     """Coalesces queued scoring requests into bucket-sized launches."""
 
     def __init__(self, scorer: BatchScorer, *,
-                 max_batch: int = BUCKETS[-1]):
+                 max_batch: int = BUCKETS[-1],
+                 clock: Callable[[], float] = time.monotonic):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.scorer = scorer
         self.max_batch = max_batch
+        # All BucketStats timing goes through this: inject a fake to make
+        # latency counters (and the admission policies fed by them)
+        # deterministic in tests.
+        self.clock = clock
         # deque: flush pops from the head per group — list.pop(0) is
         # O(queue) per pop, O(n^2) to drain a deep queue.
         self._queue: Deque[Tuple] = deque()   # [(q, Pending)]
         self.stats: Dict[int, BucketStats] = {}
+        # Guards stats dict *shape* changes vs concurrent iteration: a
+        # monitoring thread scraping stats_dict() while a flush files a
+        # first-seen bucket must not hit "dict changed size". Single
+        # .get() reads stay lock-free (atomic under the GIL).
+        self._stats_lock = threading.Lock()
 
     @property
     def queued_rows(self) -> int:
@@ -147,12 +163,13 @@ class ScoringService:
             parts = []
             off = 0
             for i, (chunk_rows, bucket) in enumerate(plan):
-                t0 = time.perf_counter()
+                t0 = self.clock()
                 part = self.scorer.score(batch[off:off + chunk_rows])
                 jax.block_until_ready(part)
-                dt = time.perf_counter() - t0
-                self.stats.setdefault(bucket, BucketStats()).record(
-                    chunk_rows, len(group) if i == 0 else 0, dt)
+                dt = self.clock() - t0
+                with self._stats_lock:
+                    self.stats.setdefault(bucket, BucketStats()).record(
+                        chunk_rows, len(group) if i == 0 else 0, dt)
                 parts.append(part)
                 off += chunk_rows
             scores = (parts[0] if len(parts) == 1
@@ -166,9 +183,11 @@ class ScoringService:
 
     def stats_lines(self) -> List[str]:
         """Human/CSV-ready per-bucket counter lines."""
+        with self._stats_lock:
+            stats = dict(self.stats)
         lines = []
-        for b in sorted(self.stats):
-            s = self.stats[b]
+        for b in sorted(stats):
+            s = stats[b]
             lines.append(
                 f"bucket={b},batches={s.batches},requests={s.requests},"
                 f"queries={s.queries},mean_ms={s.mean_latency_s*1e3:.2f},"
@@ -176,7 +195,8 @@ class ScoringService:
         return lines
 
     def stats_dict(self) -> Dict[int, Dict[str, float]]:
-        return {b: dataclasses.asdict(s) for b, s in self.stats.items()}
+        with self._stats_lock:
+            return {b: dataclasses.asdict(s) for b, s in self.stats.items()}
 
 
 def run_request_stream(service: ScoringService, requests,

@@ -10,10 +10,13 @@ import numpy as np
 import pytest
 
 import repro
-from repro.core import (SlabSpec, dual_objective, rbf, solve_blocked,
+from repro.core import (SlabSpec, dual_objective, linear, rbf, solve_blocked,
                         solve_qp, solve_smo)
 from repro.core.shrinking import solve_blocked_shrinking
 from repro.data import make_toy
+# the same scale-aware per-dtype tolerances the kernel parity matrix in
+# tests/test_kernels.py asserts with
+from repro.kernels.precision import truth_tolerance
 
 SPEC = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
 M = 96
@@ -193,6 +196,46 @@ def test_fit_threads_precision_to_provider(toy, monkeypatch):
                   max_outer=40, **({"warm_iters": 20}
                                    if strategy == "shrinking" else {}))
         assert seen and all(p == "bf16" for p in seen), strategy
+
+
+SHRINK_KERNELS = {"rbf": lambda: rbf(gamma=0.5), "linear": linear}
+
+# Two independently converged solves of the same dual agree only to the
+# KKT tolerance, not to machine precision: this floor (calibrated on the
+# toy set at tol=1e-4) is added on top of the per-dtype kernel
+# tolerances, which only cover the Gram-tile rounding.
+SOLVER_ATOL_FLOOR = 5e-3
+
+
+@pytest.mark.parametrize("precision", ["f32", "bf16"])
+@pytest.mark.parametrize("kernel_name", ["rbf", "linear"])
+def test_shrinking_matches_blocked(kernel_name, precision):
+    """The shrinking repack driver must land on the same slab as the
+    plain blocked solver — objective AND both offsets — for every
+    (kernel, precision) cell, within the scale-aware per-dtype
+    tolerances plus the solver-convergence floor."""
+    spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5,
+                    kernel=SHRINK_KERNELS[kernel_name]())
+    X, _ = make_toy(jax.random.PRNGKey(5), M)
+    K = spec.kernel.gram(X.astype(jnp.float32))   # f32 scoreboard
+    r_blk = solve_blocked(X, spec, P=4, gram_mode="precomputed",
+                          precision=precision, tol=1e-4)
+    r_shr = solve_blocked_shrinking(X, spec, P=4, gram_mode="precomputed",
+                                    precision=precision, tol=1e-4,
+                                    warm_iters=30)
+    o_blk = float(dual_objective(r_blk.model.gamma, K))
+    o_shr = float(dual_objective(r_shr.model.gamma, K))
+    tol_obj = truth_tolerance(precision, np.asarray([o_blk]))
+    np.testing.assert_allclose(
+        o_shr, o_blk, rtol=tol_obj["rtol"],
+        atol=max(tol_obj["atol"], SOLVER_ATOL_FLOOR))
+
+    rho_blk = np.asarray([float(r_blk.model.rho1), float(r_blk.model.rho2)])
+    rho_shr = np.asarray([float(r_shr.model.rho1), float(r_shr.model.rho2)])
+    tol_rho = truth_tolerance(precision, rho_blk)
+    np.testing.assert_allclose(
+        rho_shr, rho_blk, rtol=tol_rho["rtol"],
+        atol=max(tol_rho["atol"], SOLVER_ATOL_FLOOR))
 
 
 def test_provider_rejects_unknown_precision(toy):

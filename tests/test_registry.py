@@ -1,0 +1,880 @@
+"""Multi-model registry + deadline-aware admission tests.
+
+Covers the serving front-end end to end: name -> recipe -> warm model
+routing (fit-on-first-use through the ModelCache, typed errors,
+evict/refresh lifecycle), quota enforcement, and the admission
+controller's deadline policy — every timing decision driven by a manual
+fake clock, so nothing here sleeps or depends on wall-clock.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import SlabSpec, rbf
+from repro.data import make_toy
+from repro.serve import (AdmissionController, BucketStats,
+                         DuplicateModelError, ModelCache, ModelRegistry,
+                         QuotaExceededError, UnknownModelError, bucket_for)
+from repro.serve.registry import serve as routed_serve
+
+SPEC_A = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
+SPEC_B = SlabSpec(nu1=0.3, nu2=0.05, eps=0.5, kernel=rbf(gamma=1.5))
+M = 48
+FIT_KW = dict(tol=1e-2, max_outer=60)
+
+
+class ManualClock:
+    """Fake absolute clock: reads return ``t`` until ``advance``d."""
+
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture()
+def X():
+    return make_toy(jax.random.PRNGKey(5), M)[0]
+
+
+@pytest.fixture()
+def counting_fit(monkeypatch):
+    """Count real repro.fit calls (the expensive thing the registry must
+    not repeat)."""
+    from repro import api
+
+    calls = {"n": 0}
+    real_fit = api.fit
+
+    def spy(*args, **kwargs):
+        calls["n"] += 1
+        return real_fit(*args, **kwargs)
+
+    monkeypatch.setattr(api, "fit", spy)
+    return calls
+
+
+# -- registry: recipes, routing, lifecycle ----------------------------------
+
+def test_register_defers_fit_and_get_fits_once(X, counting_fit):
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    assert counting_fit["n"] == 0           # recording a recipe is free
+    sm1 = reg.get("a")
+    sm2 = reg.get("a")
+    assert sm2 is sm1 and counting_fit["n"] == 1
+    assert reg.cache.misses == 1 and reg.cache.hits == 1
+
+
+def test_unknown_model_typed_error(X):
+    reg = ModelRegistry()
+    with pytest.raises(UnknownModelError) as ei:
+        reg.get("ghost")
+    assert isinstance(ei.value, KeyError)
+    assert ei.value.name == "ghost"
+    reg.register("real", X, SPEC_A, **FIT_KW)
+    with pytest.raises(UnknownModelError) as ei:
+        reg.quota("ghost")
+    assert ei.value.known == ("real",)
+
+
+def test_reregister_identical_recipe_is_noop(X):
+    reg = ModelRegistry()
+    r1 = reg.register("a", X, SPEC_A, quota=100, **FIT_KW)
+    r2 = reg.register("a", X, SPEC_A, **FIT_KW)     # quota=None keeps 100
+    assert r2 is r1 and reg.quota("a") == 100
+    r3 = reg.register("a", X, SPEC_A, quota=50, **FIT_KW)
+    assert r3.key == r1.key and reg.quota("a") == 50
+
+
+def test_reregister_different_recipe_raises_unless_replace(X, counting_fit):
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    with pytest.raises(DuplicateModelError):
+        reg.register("a", X, SPEC_B, **FIT_KW)
+    sm_a = reg.get("a")
+    reg.register("a", X, SPEC_B, replace=True, **FIT_KW)
+    sm_b = reg.get("a")
+    assert sm_b is not sm_a and counting_fit["n"] == 2
+    assert float(sm_b.spec.nu1) == pytest.approx(0.3)
+
+
+def test_evict_keeps_recipe_and_refits_on_next_get(X, counting_fit):
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    sm1 = reg.get("a")
+    assert reg.evict("a") is True
+    assert reg.evict("a") is False          # already gone
+    assert "a" in reg                       # the recipe survives
+    sm2 = reg.get("a")
+    assert sm2 is not sm1 and counting_fit["n"] == 2
+
+
+def test_refresh_refits_eagerly(X, counting_fit):
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    sm1 = reg.get("a")
+    sm2 = reg.refresh("a")
+    assert sm2 is not sm1 and counting_fit["n"] == 2
+    assert reg.get("a") is sm2
+
+
+def test_unregister_removes_name_and_model(X, counting_fit):
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    reg.get("a")
+    reg.unregister("a")
+    assert "a" not in reg and len(reg) == 0
+    with pytest.raises(UnknownModelError):
+        reg.get("a")
+    # the cache entry went with it: re-registering re-fits
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    reg.get("a")
+    assert counting_fit["n"] == 2
+
+
+def test_registry_validates_inputs(X):
+    reg = ModelRegistry()
+    with pytest.raises(ValueError):
+        reg.register("", X, SPEC_A)
+    with pytest.raises(ValueError):
+        reg.register("a", X, SPEC_A, quota=0)
+
+
+def test_api_serve_model_routing(X):
+    reg = ModelRegistry()
+    sm1 = repro.serve(X, SPEC_A, model="a", registry=reg, **FIT_KW)
+    sm2 = repro.serve(model="a", registry=reg)        # pure name lookup
+    assert sm2 is sm1
+    # idempotent re-register with the same recipe
+    assert repro.serve(X, SPEC_A, model="a", registry=reg,
+                       **FIT_KW) is sm1
+    # a different recipe under the same name is the guarded error
+    with pytest.raises(DuplicateModelError):
+        repro.serve(X, SPEC_B, model="a", registry=reg, **FIT_KW)
+    with pytest.raises(UnknownModelError):
+        repro.serve(model="ghost", registry=reg)
+
+
+def test_routed_serve_rejects_bad_combinations(X):
+    with pytest.raises(TypeError):
+        routed_serve()                                 # no X, no model
+    with pytest.raises(TypeError):
+        routed_serve(X, SPEC_A, quota=5)               # quota without model
+    with pytest.raises(TypeError):
+        routed_serve(X, SPEC_A, model="a", cache=ModelCache())
+
+
+# -- registry: concurrency ---------------------------------------------------
+
+def test_concurrent_gets_coalesce_to_one_fit(X, monkeypatch):
+    """N threads racing on the same unregistered-but-recipe'd name must
+    run exactly ONE fit — the registry piggy-backs on the cache's
+    per-key in-flight locks."""
+    import time as _time
+
+    from repro import api
+
+    calls = {"n": 0}
+    real_fit = api.fit
+
+    def slow_fit(*args, **kwargs):
+        calls["n"] += 1
+        _time.sleep(0.4)        # long enough for every thread to race
+        return real_fit(*args, **kwargs)
+
+    monkeypatch.setattr(api, "fit", slow_fit)
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    n_threads = 4
+    results = [None] * n_threads
+    barrier = threading.Barrier(n_threads)
+
+    def worker(i):
+        barrier.wait()
+        results[i] = reg.get("a")
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert calls["n"] == 1, "the fleet ran the expensive fit more than once"
+    assert all(r is results[0] for r in results)
+    assert reg.cache.misses == 1 and reg.cache.hits == n_threads - 1
+
+
+def test_evict_during_inflight_score_is_safe(X):
+    """Evicting a model while another thread is mid-score must not
+    corrupt that thread's results: the scorer holds its own reference;
+    eviction only forgets the cache's."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    sm = reg.get("a")
+    q = np.asarray(make_toy(jax.random.PRNGKey(9), 500)[0])
+    ref = np.asarray(sm.model.decision_function(jnp.asarray(q, jnp.float32)))
+
+    out, errs = [], []
+    started = threading.Event()
+
+    def score_loop():
+        scorer = sm.scorer()
+        started.set()
+        try:
+            for _ in range(5):
+                out.append(np.asarray(scorer.score(q)))
+        except BaseException as e:     # surface, don't swallow
+            errs.append(e)
+
+    t = threading.Thread(target=score_loop)
+    t.start()
+    started.wait(timeout=60)
+    for _ in range(5):                 # evict repeatedly mid-flight
+        reg.evict("a")
+    t.join(timeout=300)
+    assert not errs
+    assert len(out) == 5
+    for scores in out:
+        np.testing.assert_allclose(scores, ref, rtol=2e-4, atol=2e-4)
+    # and the name still serves (re-fit on demand)
+    assert reg.get("a").score(q[:4]).shape == (4,)
+
+
+# -- admission: policy, quotas, deadlines (all on the fake clock) ------------
+
+@pytest.fixture()
+def fleet(X):
+    """Two registered models + a controller on a manual clock."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    reg.register("b", X, SPEC_B, **FIT_KW)
+    clock = ManualClock()
+    ctrl = AdmissionController(reg, clock=clock, max_batch=128)
+    return reg, ctrl, clock
+
+
+def _q(seed, n):
+    return np.asarray(make_toy(jax.random.PRNGKey(seed), n)[0])
+
+
+def test_admission_windows_group_per_model(fleet):
+    reg, ctrl, clock = fleet
+    ha = ctrl.submit("a", _q(1, 10))
+    hb = ctrl.submit("b", _q(2, 20))
+    assert ctrl.queued_rows("a") == 10 and ctrl.queued_rows("b") == 20
+    assert not ha.flushed and not hb.flushed
+    assert ctrl.poll() == 0            # no deadlines, below capacity
+    assert ctrl.flush_model("a") == 1
+    assert ha.done and not hb.flushed
+    assert ctrl.drain() == 1
+    assert hb.done
+
+
+def test_admission_bucket_fill_flushes_at_submit(fleet):
+    reg, ctrl, clock = fleet
+    h1 = ctrl.submit("b", _q(1, 100))
+    assert not h1.flushed
+    h2 = ctrl.submit("b", _q(2, 28))   # 128 rows == max_batch -> flush now
+    assert h1.flushed and h2.flushed and h1.done and h2.done
+    assert ctrl.queued_rows("b") == 0
+
+
+def test_admission_deadline_uses_observed_latency(fleet):
+    """The window flushes exactly when waiting longer would miss the
+    earliest deadline given OBSERVED per-bucket latency — not a tick
+    earlier, and never via wall-clock."""
+    reg, ctrl, clock = fleet
+    svc = ctrl.service("a")
+    # seed the observation: the 64-bucket takes 250ms per launch
+    # (dyadic values, so the due-time comparison is float-exact)
+    svc.stats.setdefault(64, BucketStats()).record(64, 1, 0.25)
+    assert ctrl.estimate_latency_s("a", 30) == pytest.approx(0.25)
+
+    h = ctrl.submit("a", _q(1, 30), deadline=1.0)
+    assert not ctrl.due("a")           # 0 + 0.25 << 1.0: keep coalescing
+    assert ctrl.poll() == 0
+    clock.t = 0.5
+    assert not ctrl.due("a")           # 0.5 + 0.25 < 1.0: still early
+    clock.t = 0.75
+    assert ctrl.due("a")               # 0.75 + 0.25 >= 1.0: last safe moment
+    assert ctrl.poll() == 1
+    assert h.done
+
+
+def test_admission_unobserved_bucket_uses_fallback(X):
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    clock = ManualClock()
+    ctrl = AdmissionController(reg, clock=clock, fallback_latency_s=0.050)
+    ctrl.submit("a", _q(1, 10), deadline=0.060)
+    assert ctrl.estimate_latency_s("a") == pytest.approx(0.050)
+    assert not ctrl.due("a")           # 0 + 50 < 60
+    clock.t = 0.010
+    assert ctrl.due("a")               # 10 + 50 >= 60
+    # safety_factor scales the estimate
+    ctrl2 = AdmissionController(reg, clock=ManualClock(),
+                                fallback_latency_s=0.050, safety_factor=2.0)
+    ctrl2.submit("a", _q(1, 10), deadline=0.060)
+    assert ctrl2.due("a")              # 0 + 2*50 >= 60: flush right away
+
+
+def test_admission_estimate_sums_launch_plan(fleet):
+    """A window bigger than one launch costs the sum of its planned
+    launches' observed bucket latencies."""
+    reg, ctrl, clock = fleet
+    svc = ctrl.service("a")
+    top = svc.scorer.chunk_rows()
+    svc.stats.setdefault(bucket_for(top), BucketStats()).record(top, 1, 0.040)
+    svc.stats.setdefault(64, BucketStats()).record(64, 1, 0.010)
+    # top-bucket chunk + 50-row remainder -> 40ms + 10ms
+    assert ctrl.estimate_latency_s("a", top + 50) == pytest.approx(0.050)
+
+
+def test_admission_max_wait_bounds_deadline_less_windows(fleet):
+    reg, ctrl, clock = fleet
+    ctrl.max_wait_s = 0.5
+    h = ctrl.submit("a", _q(1, 10))    # no deadline
+    assert ctrl.poll() == 0
+    clock.advance(0.49)
+    assert ctrl.poll() == 0
+    clock.advance(0.02)
+    assert ctrl.poll() == 1 and h.done
+
+
+def test_admission_quota_rejects_typed_and_recovers(fleet):
+    reg, _, clock = fleet
+    # quota on "a" (identical recipe re-register just updates the
+    # quota); max_batch above it so the window genuinely accumulates —
+    # bucket fill would otherwise flush before the quota can bind
+    reg.register("a", reg.recipe("a").X, SPEC_A, quota=200, **FIT_KW)
+    ctrl = AdmissionController(reg, clock=clock)
+    ctrl.submit("a", _q(1, 150))
+    with pytest.raises(QuotaExceededError) as ei:
+        ctrl.submit("a", _q(2, 51))    # 150 + 51 > 200
+    err = ei.value
+    assert (err.model, err.quota, err.queued_rows, err.requested_rows) \
+        == ("a", 200, 150, 51)
+    assert ctrl.rejected["a"] == 1
+    # under the line still fits; "b" (no quota) is unconstrained
+    ctrl.submit("a", _q(3, 50))
+    ctrl.submit("b", _q(4, 120))       # fills its 128-bucket? no: 120 < 128
+    assert ctrl.queued_rows("a") == 200
+    # flushing frees the window: quota applies to QUEUED rows, not history
+    ctrl.flush_model("a")
+    ctrl.submit("a", _q(5, 200))
+    assert ctrl.queued_rows("a") == 200
+
+
+def test_admission_handle_result_forces_its_window(fleet):
+    reg, ctrl, clock = fleet
+    q = _q(1, 12)
+    h = ctrl.submit("a", q, deadline=99.0)
+    out = np.asarray(h.result())       # no poll, no clock advance
+    direct = np.asarray(reg.get("a").scorer().score(q))
+    np.testing.assert_allclose(out, direct, rtol=0, atol=0)
+    assert ctrl.queued_rows("a") == 0
+
+
+def test_handle_result_routes_inflight_through_model_lock(fleet):
+    """A handle whose pending is bound but NOT done (another thread
+    mid-flush) must route result() through controller.flush_model (the
+    model lock) — never poke the non-thread-safe service flush
+    directly."""
+    reg, ctrl, clock = fleet
+    h = ctrl.submit("a", _q(1, 8), deadline=99.0)
+
+    class _StuckPending:
+        done = False
+
+        def result(self):
+            raise AssertionError("bypassed the model lock: "
+                                 "Pending.result() before flush_model")
+
+    calls = []
+    real = ctrl.flush_model
+
+    def spy(model):
+        calls.append(model)
+        h._pending = None          # 'flush finished': let the real one bind
+        return real(model)
+
+    ctrl.flush_model = spy
+    h._pending = _StuckPending()   # simulate a flush in progress
+    out = h.result()
+    assert calls == ["a"]
+    assert np.asarray(out).shape == (8,)
+
+
+def test_admission_rejects_bad_requests(fleet):
+    reg, ctrl, clock = fleet
+    d = reg.get("a").d
+    with pytest.raises(ValueError):
+        ctrl.submit("a", np.zeros((0, d), np.float32))      # zero rows
+    with pytest.raises(ValueError):
+        ctrl.submit("a", np.zeros((4, d + 1), np.float32))  # wrong d
+    with pytest.raises(UnknownModelError):
+        ctrl.submit("ghost", _q(1, 4))
+
+
+def test_admission_poll_flushes_in_deadline_order(fleet):
+    reg, ctrl, clock = fleet
+    order = []
+    real = ctrl.flush_model
+
+    def spy(model):
+        order.append(model)
+        return real(model)
+
+    ctrl.flush_model = spy
+    ctrl.submit("a", _q(1, 10), deadline=2.0)
+    ctrl.submit("b", _q(2, 10), deadline=1.0)
+    clock.t = 5.0                      # both overdue
+    ctrl.poll()
+    assert order == ["b", "a"]         # earliest deadline first
+
+
+def test_admission_max_wait_defers_to_deadline_policy(fleet):
+    """A window WITH a deadline is governed by deadline pressure alone:
+    the max_wait_s age bound (documented for deadline-less windows) must
+    not flush it early and waste the promised coalescing."""
+    reg, ctrl, clock = fleet
+    ctrl.max_wait_s = 0.05
+    svc = ctrl.service("a")
+    svc.stats.setdefault(64, BucketStats()).record(64, 1, 0.25)
+    ctrl.submit("a", _q(1, 30), deadline=2.0)
+    clock.t = 1.0                      # way past max_wait_s
+    assert not ctrl.due("a")           # ...but 1.0 + 0.25 < 2.0: wait
+    assert ctrl.poll() == 0
+    clock.t = 1.75
+    assert ctrl.due("a")               # deadline pressure, not age
+    assert ctrl.poll() == 1
+
+
+def test_admission_rebuilds_service_after_refresh_and_replace(X,
+                                                              counting_fit):
+    """evict/refresh/replace on the registry must reach a live
+    controller: its memoized per-model service is rebuilt on the next
+    touch (registry version bump), so post-refresh traffic scores
+    against the fresh model, not a stale scorer."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    ctrl = AdmissionController(reg)
+    ctrl.submit("a", _q(1, 4)).result()
+    svc1 = ctrl._services["a"]
+    reg.refresh("a")
+    ctrl.submit("a", _q(2, 4)).result()
+    assert ctrl._services["a"] is not svc1
+    assert counting_fit["n"] == 2      # initial fit + the refresh re-fit
+
+    # replace=True swaps the spec under the same name: traffic follows
+    reg.set_quota("a", 90)
+    reg.register("a", X, SPEC_B, replace=True, **FIT_KW)
+    assert reg.quota("a") == 90        # replace keeps the quota too
+    q = _q(3, 16)
+    out = np.asarray(ctrl.submit("a", q).result())
+    direct = np.asarray(reg.get("a").scorer().score(q))
+    np.testing.assert_allclose(out, direct, rtol=0, atol=0)
+    assert float(reg.get("a").spec.nu1) == pytest.approx(0.3)
+
+
+def test_admission_fit_of_one_model_does_not_block_another(X, monkeypatch):
+    """Per-model locking: a cold model's fit-on-first-use must not
+    serialize a warm model's traffic behind the controller."""
+    from repro import api
+
+    real_fit = api.fit
+    gate = threading.Event()
+
+    def gated_fit(Xa, spec, **kwargs):
+        if float(spec.nu1) == pytest.approx(0.3):     # model "b" only
+            assert gate.wait(timeout=60)
+        return real_fit(Xa, spec, **kwargs)
+
+    monkeypatch.setattr(api, "fit", gated_fit)
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    reg.register("b", X, SPEC_B, **FIT_KW)
+    ctrl = AdmissionController(reg)
+    ctrl.service("a")                  # warm "a" (nu1=0.5: not gated)
+
+    b_done = threading.Event()
+
+    def cold_path():
+        ctrl.submit("b", _q(1, 8))     # stuck inside b's gated fit
+        b_done.set()
+
+    t = threading.Thread(target=cold_path)
+    t.start()
+    try:
+        # while b is mid-fit, a's admission and scoring must flow
+        out = ctrl.submit("a", _q(2, 8)).result()
+        assert np.asarray(out).shape == (8,)
+        assert not b_done.is_set()     # b really was still fitting
+    finally:
+        gate.set()
+        t.join(timeout=120)
+    assert b_done.is_set()
+    ctrl.drain()
+
+
+def test_flush_failure_keeps_window_and_recovers(X, counting_fit):
+    """A flush whose service resolution fails (name unregistered between
+    submit and flush) must NOT drop the queued requests: the window
+    survives, the error surfaces, and re-registering the recipe lets a
+    later flush serve the original handles."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    ctrl = AdmissionController(reg)
+    ctrl.service("a")                        # warm, version 0
+    q = _q(1, 12)
+    h = ctrl.submit("a", q)
+    reg.unregister("a")                      # version bump -> rebuild path
+    with pytest.raises(UnknownModelError):
+        ctrl.flush_model("a")
+    assert ctrl.queued_rows("a") == 12       # nothing was dropped
+    assert not h.flushed
+    reg.register("a", X, SPEC_A, **FIT_KW)   # heal the name
+    assert ctrl.flush_model("a") == 1
+    direct = np.asarray(reg.get("a").scorer().score(q))
+    np.testing.assert_allclose(np.asarray(h.result()), direct,
+                               rtol=0, atol=0)
+
+
+def test_registry_grows_own_cache_with_fleet(X):
+    """A fleet larger than the default ModelCache LRU must not thrash:
+    the registry grows its own cache so every registered recipe keeps
+    its warm slot (registration alone is free — no fits here)."""
+    reg = ModelRegistry()
+    for i in range(12):
+        spec = SlabSpec(nu1=0.3 + 0.02 * i, nu2=0.05, eps=0.5,
+                        kernel=rbf(gamma=0.5))
+        reg.register(f"tenant-{i}", X, spec, **FIT_KW)
+    assert reg.cache.maxsize >= 12
+    # a caller-owned cache is respected, not resized
+    own = ModelCache(maxsize=2)
+    reg2 = ModelRegistry(cache=own)
+    for i in range(4):
+        spec = SlabSpec(nu1=0.3 + 0.02 * i, nu2=0.05, eps=0.5,
+                        kernel=rbf(gamma=0.5))
+        reg2.register(f"t{i}", X, spec, **FIT_KW)
+    assert own.maxsize == 2
+
+
+def test_routed_serve_quota_update_without_X(X):
+    """serve(model=, quota=) on a registered name must apply the quota,
+    not silently drop it; spec/fit kwargs without X are an error."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    assert reg.quota("a") is None
+    routed_serve(model="a", registry=reg, quota=77)
+    assert reg.quota("a") == 77
+    with pytest.raises(TypeError):
+        routed_serve(spec=SPEC_B, model="a", registry=reg)
+    with pytest.raises(TypeError):
+        routed_serve(model="a", registry=reg, tol=1e-3)
+    with pytest.raises(UnknownModelError):
+        routed_serve(model="ghost", registry=reg, quota=5)
+
+
+def test_rejected_submit_leaves_no_window(X):
+    """A rejected first request must not create an empty window: its
+    stale opened_at would backdate the next admitted request's age and
+    make max_wait_s flush it immediately."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, quota=100, **FIT_KW)
+    clock = ManualClock()
+    ctrl = AdmissionController(reg, clock=clock, max_wait_s=0.5)
+    with pytest.raises(QuotaExceededError):
+        ctrl.submit("a", _q(1, 150))         # oversized single request
+    assert "a" not in ctrl._windows          # no residue
+    clock.t = 10.0                           # much later
+    ctrl.submit("a", _q(2, 10))
+    assert not ctrl.due("a")                 # fresh window, age 0
+    clock.t = 10.49
+    assert not ctrl.due("a")
+    clock.t = 10.51
+    assert ctrl.due("a")
+
+
+def test_replace_with_incompatible_dim_fails_only_stale_handles(X):
+    """A request admitted against the OLD model but flushed after a
+    replace to a different feature dim is permanently unservable: its
+    handle must carry the error (result() raises), the flush must not
+    orphan it with a bare AttributeError, and fresh-dim traffic must
+    flow immediately after."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)            # d=2 toy
+    ctrl = AdmissionController(reg)
+    ctrl.service("a")
+    h_stale = ctrl.submit("a", _q(1, 8))              # validated vs d=2
+    X3, _ = make_toy(jax.random.PRNGKey(5), M, d=3)
+    reg.register("a", X3, SPEC_A, replace=True, **FIT_KW)
+    assert ctrl.flush_model("a") == 0                 # nothing servable
+    assert h_stale.done
+    with pytest.raises(ValueError, match="feature dim"):
+        h_stale.result()
+    q3 = np.asarray(make_toy(jax.random.PRNGKey(9), 8, d=3)[0])
+    h_new = ctrl.submit("a", q3)
+    np.testing.assert_allclose(
+        np.asarray(h_new.result()),
+        np.asarray(reg.get("a").scorer().score(q3)), rtol=0, atol=0)
+
+
+def test_forget_releases_retired_model_state(X):
+    """forget() flushes and then drops every per-model structure, so a
+    churning fleet doesn't pin retired tenants' packed models/locks/
+    stats in a long-lived controller."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    ctrl = AdmissionController(reg)
+    h = ctrl.submit("a", _q(1, 8))                    # still queued
+    ctrl.forget("a")
+    assert h.done                                     # flushed, not dropped
+    assert np.asarray(h.result()).shape == (8,)
+    assert "a" not in ctrl._services
+    assert "a" not in ctrl._windows
+    # the lock entry deliberately survives: popping it under a waiting
+    # thread would let a later submit mint a second, concurrent lock
+    assert "a" in ctrl._model_locks
+    assert ctrl.stats_dict() == {}
+    reg.unregister("a")
+    assert len(reg) == 0
+
+
+def test_rejected_only_model_still_visible_in_stats(X):
+    """A model shedding 100% of its traffic (every submit over quota,
+    service never resolved) must still appear in stats output — an
+    operator reading zero rejections while load is being dropped is the
+    worst kind of silent."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, quota=10, **FIT_KW)
+    ctrl = AdmissionController(reg)
+    with pytest.raises(QuotaExceededError):
+        ctrl.submit("a", _q(1, 50))
+    assert "a" not in ctrl._services          # the reject paid no fit
+    stats = ctrl.stats_dict()
+    assert stats["a"]["rejected"] == 1 and stats["a"]["buckets"] == {}
+    assert any("model=a" in ln and "rejected=1" in ln
+               for ln in ctrl.stats_lines())
+
+
+def test_admission_warns_on_unbindable_quota(X):
+    """A quota at or above max_batch can never reject (bucket fill
+    drains the window first) — the controller says so once instead of
+    letting the operator believe load-shedding is armed."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, quota=1000, **FIT_KW)
+    ctrl = AdmissionController(reg, max_batch=64)
+    with pytest.warns(RuntimeWarning, match="quota 1000"):
+        ctrl.service("a")
+
+
+def test_unbindable_quota_warning_covers_edge_and_set_quota(X):
+    """Rejection needs quota < rows+n < max_batch, so quota ==
+    max_batch - 1 is just as unbindable as quota == max_batch (the
+    off-by-one); and installing an unbindable quota via set_quota AFTER
+    the service is memoized must still warn on the next submit."""
+    import warnings as _warnings
+
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, quota=63, **FIT_KW)    # max_batch - 1
+    ctrl = AdmissionController(reg, max_batch=64)
+    with pytest.warns(RuntimeWarning, match="cannot bind"):
+        ctrl.service("a")
+
+    # a binding quota (<= max_batch - 2) stays silent
+    reg2 = ModelRegistry()
+    reg2.register("a", X, SPEC_A, quota=62, **FIT_KW)
+    ctrl2 = AdmissionController(reg2, max_batch=64)
+    ctrl2.service("a")       # fit outside the filter (jax may warn)
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", RuntimeWarning)
+        ctrl2.submit("a", _q(1, 4))   # enqueue only: no compute
+    ctrl2.drain()
+
+    # set_quota after memoization: the submit path re-checks
+    reg2.set_quota("a", 64)
+    with pytest.warns(RuntimeWarning, match="cannot bind"):
+        ctrl2.submit("a", _q(2, 4))
+    ctrl2.drain()
+
+
+def test_warm_registry_lookup_skips_refingerprint(X, monkeypatch):
+    """`serve(model=...)` is documented as a pure name lookup: a warm
+    get() must hit the cache through the precomputed recipe key, not
+    re-hash the whole training set per request."""
+    from repro.serve import model_cache
+
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    sm = reg.get("a")                      # cold: fit + key computation
+
+    calls = {"n": 0}
+    real = model_cache.fingerprint_array
+
+    def spy(arr):
+        calls["n"] += 1
+        return real(arr)
+
+    monkeypatch.setattr(model_cache, "fingerprint_array", spy)
+    assert reg.get("a") is sm
+    assert routed_serve(model="a", registry=reg) is sm
+    assert calls["n"] == 0
+    assert reg.cache.hits == 2
+
+
+def test_quota_yields_to_bucket_fill_flush(X):
+    """An admission that reaches max_batch flushes the window instead of
+    growing it, so it must be ADMITTED even when window+request exceeds
+    the quota — rejecting it would shed traffic that never threatened
+    the backlog."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, quota=100, **FIT_KW)
+    ctrl = AdmissionController(reg, max_batch=128)
+    ctrl.submit("a", _q(1, 90))
+    h = ctrl.submit("a", _q(2, 60))    # 150 >= max_batch: flush, not reject
+    assert h.done and ctrl.queued_rows("a") == 0
+    assert ctrl.rejected.get("a", 0) == 0
+    # ...while a request that WOULD sit queued over quota still rejects
+    ctrl.submit("a", _q(3, 90))
+    with pytest.raises(QuotaExceededError):
+        ctrl.submit("a", _q(4, 20))    # 110 queued < max_batch, > quota
+
+
+def test_rejected_submit_never_triggers_fit(X, counting_fit):
+    """Admission decisions run before service resolution: an over-quota
+    or malformed request against a COLD model must not pay the fit."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, quota=100, **FIT_KW)
+    ctrl = AdmissionController(reg)
+    with pytest.raises(QuotaExceededError):
+        ctrl.submit("a", _q(1, 150))
+    with pytest.raises(ValueError):
+        ctrl.submit("a", np.zeros((0, 2), np.float32))
+    with pytest.raises(UnknownModelError):
+        ctrl.submit("ghost", _q(2, 4))
+    assert counting_fit["n"] == 0      # the model is still cold
+
+
+def test_evict_version_ordering_no_stale_memo(X):
+    """The lifecycle version must bump AFTER the cache eviction: a
+    consumer racing between the two memoizes at worst (old model, old
+    version), which the bump invalidates — never (old, new) forever."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    ctrl = AdmissionController(reg)
+    ctrl.service("a")
+    sm_old = reg.get("a")
+
+    real_evict = reg.cache.evict
+    raced = {}
+
+    def racing_evict(key):
+        # a controller touch sneaking in mid-refresh, BEFORE the entry
+        # is dropped: it must not be able to pin the stale model
+        raced["svc"] = ctrl.service("a")
+        return real_evict(key)
+
+    reg.cache.evict = racing_evict
+    try:
+        reg.refresh("a")
+    finally:
+        reg.cache.evict = real_evict
+    fresh = ctrl.service("a")
+    assert fresh.scorer.model is not sm_old
+    assert fresh.scorer.model is reg.get("a").scorer().model
+
+
+def test_evict_spares_shared_recipe_entry(X, counting_fit):
+    """Two names over the identical recipe share one cache entry (by
+    design); evicting or unregistering ONE must not cold-start the
+    other."""
+    reg = ModelRegistry()
+    reg.register("a", X, SPEC_A, **FIT_KW)
+    reg.register("b", X, SPEC_A, **FIT_KW)      # identical recipe
+    sm = reg.get("a")
+    assert reg.get("b") is sm and counting_fit["n"] == 1
+    assert reg.evict("a") is False              # shared: entry survives
+    assert reg.get("b") is sm and counting_fit["n"] == 1
+    reg.unregister("a")
+    assert reg.get("b") is sm and counting_fit["n"] == 1
+    # with "a" gone the recipe is no longer shared: eviction now bites
+    assert reg.evict("b") is True
+    reg.get("b")
+    assert counting_fit["n"] == 2
+
+
+# -- acceptance: the end-to-end two-model story ------------------------------
+
+def test_end_to_end_two_models_through_admission(X):
+    """ISSUE 4 acceptance: two registered models with distinct specs
+    served concurrently through the admission controller — every request
+    routed to the correct model (scores match that model's direct
+    ``BatchScorer.score``), deadline-ordered flushes verified on a fake
+    clock, and over-quota submits rejected with the typed error. No
+    ``time.sleep`` anywhere."""
+    reg = ModelRegistry()
+    # quotas strictly below max_batch — at or above it, bucket fill
+    # drains the window before a quota could ever bind
+    reg.register("tenant-a", X, SPEC_A, quota=300, **FIT_KW)
+    reg.register("tenant-b", X, SPEC_B, quota=300, **FIT_KW)
+    clock = ManualClock()
+    ctrl = AdmissionController(reg, clock=clock, max_batch=512)
+
+    # the two models are genuinely distinct artifacts
+    sm_a, sm_b = reg.get("tenant-a"), reg.get("tenant-b")
+    assert float(sm_a.spec.kernel.gamma) != float(sm_b.spec.kernel.gamma)
+
+    # interleaved traffic, per-request deadlines: b's window is due first
+    reqs = []
+    for i in range(6):
+        name = ("tenant-a", "tenant-b")[i % 2]
+        q = _q(100 + i, 17 + 9 * i)
+        deadline = {"tenant-a": 2.0, "tenant-b": 1.0}[name]
+        reqs.append((name, q, ctrl.submit(name, q, deadline=deadline)))
+
+    assert ctrl.poll() == 0                      # t=0: nobody is due
+    clock.t = 1.0
+    ctrl.poll()                                  # only b's deadline hit
+    assert all(h.done == (name == "tenant-b") for name, _, h in reqs)
+    clock.t = 2.0
+    ctrl.poll()
+    assert all(h.done for _, _, h in reqs)
+
+    # every request came back from ITS model, bit-for-bit
+    for name, q, h in reqs:
+        direct = np.asarray(reg.get(name).scorer().score(q))
+        np.testing.assert_allclose(np.asarray(h.result()), direct,
+                                   rtol=0, atol=0)
+        # and the two models disagree on the same rows (routing is real)
+        other = ("tenant-a", "tenant-b")[name == "tenant-a"]
+        cross = np.asarray(reg.get(other).scorer().score(q))
+        assert float(np.max(np.abs(direct - cross))) > 1e-6
+
+    # over-quota traffic is shed with the typed error (200 + 101 rows
+    # would stay queued — below max_batch, above the 300-row quota)
+    ctrl.submit("tenant-a", _q(900, 200))
+    with pytest.raises(QuotaExceededError):
+        ctrl.submit("tenant-a", _q(901, 101))
+    assert ctrl.rejected["tenant-a"] == 1
+    ctrl.drain()
+
+    # per-model stats saw exactly the admitted traffic
+    stats = ctrl.stats_dict()
+    served_a = sum(b["queries"]
+                   for b in stats["tenant-a"]["buckets"].values())
+    served_b = sum(b["queries"]
+                   for b in stats["tenant-b"]["buckets"].values())
+    assert served_a == sum(q.shape[0] for n, q, _ in reqs
+                           if n == "tenant-a") + 200
+    assert served_b == sum(q.shape[0] for n, q, _ in reqs
+                           if n == "tenant-b")

@@ -22,6 +22,20 @@ from repro.serve import (BUCKETS, ModelCache, ScoringService, bucket_for,
 SPEC = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
 M = 96
 
+
+class TickClock:
+    """Fake service clock: every call advances a fixed step, so each
+    timed launch reads exactly ``step`` seconds — latency assertions
+    become equalities instead of wall-clock-dependent inequalities."""
+
+    def __init__(self, step=1e-3):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
 # every bucket boundary (63/64/65, ...), non-multiples of the query tile,
 # single row, and a beyond-top-bucket size that exercises chunking
 PARITY_SIZES = [1, 63, 64, 65, 200, 255, 256, 257, 1000]
@@ -80,8 +94,11 @@ def test_service_counts_chunked_launches(served):
     """A single oversized request is several kernel launches, and each
     launch is filed under the bucket that actually served it: the full
     chunk under the top bucket, the 70-row remainder under ITS bucket
-    (256), not lumped under the top one."""
-    svc = ScoringService(served.scorer())
+    (256), not lumped under the top one. The injected tick clock makes
+    the latency counters exact (one step per launch) instead of
+    wall-clock-dependent."""
+    clock = TickClock(step=1e-3)
+    svc = ScoringService(served.scorer(), clock=clock)
     n = BUCKETS[-1] + 70
     q = np.asarray(make_toy(jax.random.PRNGKey(88), n)[0])
     svc.submit(q)
@@ -90,7 +107,19 @@ def test_service_counts_chunked_launches(served):
     rem = svc.stats[bucket_for(70)]
     assert (top.batches, top.queries, top.requests) == (1, BUCKETS[-1], 1)
     assert (rem.batches, rem.queries, rem.requests) == (1, 70, 0)
-    assert top.total_s > 0 and rem.total_s > 0
+    assert top.total_s == pytest.approx(clock.step)
+    assert rem.total_s == pytest.approx(clock.step)
+    assert top.mean_latency_s == pytest.approx(clock.step)
+    assert rem.last_s == pytest.approx(clock.step)
+
+
+def test_service_default_clock_is_monotonic():
+    """No direct time.* calls in the hot loop: all BucketStats timing
+    goes through the injectable clock, defaulting to time.monotonic."""
+    import time as _time
+
+    svc = ScoringService(_FakeScorer())
+    assert svc.clock is _time.monotonic
 
 
 def test_service_chunked_scatter_parity(served):
@@ -229,7 +258,8 @@ def test_cache_lru_eviction():
 def test_service_microbatch_scatter_parity(served):
     """Queued requests coalesce into one launch and every handle gets
     exactly its own rows back."""
-    svc = ScoringService(served.scorer())
+    clock = TickClock(step=2e-3)
+    svc = ScoringService(served.scorer(), clock=clock)
     sizes = (5, 48, 63, 100)
     reqs = [np.asarray(make_toy(jax.random.PRNGKey(40 + i), n)[0])
             for i, n in enumerate(sizes)]
@@ -245,7 +275,8 @@ def test_service_microbatch_scatter_parity(served):
     assert svc.stats[b].batches == 1
     assert svc.stats[b].requests == len(sizes)
     assert svc.stats[b].queries == sum(sizes)
-    assert svc.stats[b].total_s > 0
+    # one launch, one clock step — exact under the fake clock
+    assert svc.stats[b].total_s == pytest.approx(clock.step)
 
 
 def test_service_groups_respect_max_batch(served):

@@ -1,0 +1,169 @@
+"""Property/stress layer over the serving service + admission windows.
+
+Hypothesis drives random request streams — mixed sizes (including
+groups beyond ``max_batch``), interleaved submit/flush, multiple models
+— against models packed directly from hand-built ``OCSSVMModel``s (no
+solver in the loop, so hundreds of examples stay cheap) and asserts the
+two load-bearing invariants of the micro-batching layer:
+
+* **scatter-back**: every handle gets exactly the scores its request
+  would get from a direct ``BatchScorer.score`` call — coalescing,
+  chunking, and routing must be invisible to the caller;
+* **accounting**: per-bucket ``BucketStats`` add up — live rows scored
+  equal rows submitted, requests served equal handles issued, and a
+  zero-row submit is rejected before it can poison a flush.
+
+Marked ``slow``: CI runs these in their own matrix cell.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import OCSSVMModel, SlabSpec, rbf  # noqa: E402
+from repro.serve import (AdmissionController, ScoringService,  # noqa: E402
+                         pack_model)
+
+pytestmark = pytest.mark.slow
+
+D = 3
+MAX_BATCH = 64          # small cap so "oversized group" is cheap to hit
+
+
+def _packed(seed: int, rho1: float = 0.2, rho2: float = 0.9,
+            n_rows: int = 24):
+    """A ServingModel straight from a hand-built model: no fit needed."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n_rows, D)), jnp.float32)
+    gamma = jnp.asarray(rng.uniform(-0.5, 1.0, size=(n_rows,)), jnp.float32)
+    spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5,
+                    kernel=rbf(gamma=0.5 + 0.25 * (seed % 3)))
+    model = OCSSVMModel(gamma=gamma, rho1=jnp.float32(rho1),
+                       rho2=jnp.float32(rho2), X=X, spec=spec)
+    return pack_model(model)
+
+
+MODELS = {"m0": _packed(0), "m1": _packed(1, rho1=-0.3, rho2=0.4)}
+
+
+class _StaticRegistry:
+    """Registry stub for the controller: fixed packed models + quotas
+    (the controller only needs ``get`` and ``quota``)."""
+
+    def __init__(self, models, quotas=None):
+        self._models = models
+        self._quotas = quotas or {}
+
+    def get(self, name):
+        return self._models[name]
+
+    def quota(self, name):
+        return self._quotas.get(name)
+
+
+def _request(seed: int, n: int) -> np.ndarray:
+    return np.random.default_rng(seed).normal(size=(n, D)) \
+        .astype(np.float32)
+
+
+# One stream op: (size, flush_after?) — sizes beyond MAX_BATCH exercise
+# the oversized-group chunking path.
+OPS = st.lists(
+    st.tuples(st.integers(min_value=1, max_value=3 * MAX_BATCH + 5),
+              st.booleans()),
+    min_size=1, max_size=8)
+
+
+@settings(max_examples=12, deadline=None)
+@given(ops=OPS)
+def test_stream_scatter_back_matches_direct_score(ops):
+    """Interleaved submit/flush, mixed sizes: every handle's rows equal a
+    direct BatchScorer.score of its own request."""
+    sm = MODELS["m0"]
+    svc = ScoringService(sm.scorer(), max_batch=MAX_BATCH)
+    handles = []
+    for i, (n, flush_now) in enumerate(ops):
+        q = _request(1000 + i, n)
+        handles.append((q, svc.submit(q)))
+        if flush_now:
+            svc.flush()
+    svc.flush()
+    assert not svc._queue
+    for q, h in handles:
+        assert h.done
+        np.testing.assert_allclose(np.asarray(h.result()),
+                                   np.asarray(sm.scorer().score(q)),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(ops=OPS)
+def test_stream_stats_invariants(ops):
+    """Per-bucket counters add up exactly: live rows == submitted rows,
+    requests == handles, regardless of grouping/chunking."""
+    svc = ScoringService(MODELS["m0"].scorer(), max_batch=MAX_BATCH)
+    handles = []
+    for i, (n, flush_now) in enumerate(ops):
+        handles.append(svc.submit(_request(2000 + i, n)))
+        if flush_now:
+            svc.flush()
+    svc.flush()
+    total_rows = sum(n for n, _ in ops)
+    assert sum(s.queries for s in svc.stats.values()) == total_rows
+    assert sum(s.requests for s in svc.stats.values()) == len(handles)
+    assert sum(h.n for h in handles) == total_rows
+    assert all(h.done for h in handles)
+    # every recorded launch was a real one
+    assert all(s.batches >= 1 for s in svc.stats.values())
+
+
+@settings(max_examples=10, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(sorted(MODELS)),
+              st.integers(min_value=1, max_value=2 * MAX_BATCH),
+              st.booleans()),
+    min_size=1, max_size=8))
+def test_multi_model_admission_routes_every_request(ops):
+    """Random multi-model streams through the admission controller:
+    results always come from the request's own model, and per-model
+    accounting matches what was admitted."""
+    ctrl = AdmissionController(_StaticRegistry(MODELS),
+                               max_batch=MAX_BATCH)
+    handles = []
+    for i, (name, n, poll_now) in enumerate(ops):
+        q = _request(3000 + i, n)
+        handles.append((name, q, ctrl.submit(name, q)))
+        if poll_now:
+            ctrl.poll()                 # deadline-less: a no-op window scan
+    ctrl.drain()
+    for name, q, h in handles:
+        assert h.done
+        np.testing.assert_allclose(
+            np.asarray(h.result()),
+            np.asarray(MODELS[name].scorer().score(q)),
+            rtol=1e-5, atol=1e-6)
+    for name in MODELS:
+        submitted = sum(n for m, n, _ in ops if m == name)
+        svc = ctrl._services.get(name)
+        served = (sum(s.queries for s in svc.stats.values())
+                  if svc is not None else 0)
+        assert served == submitted
+        assert ctrl.queued_rows(name) == 0
+
+
+def test_zero_row_submit_rejected_everywhere():
+    """A zero-row request fails fast at the admission edge — service and
+    controller both — and leaves no queue residue behind."""
+    svc = ScoringService(MODELS["m0"].scorer(), max_batch=MAX_BATCH)
+    with pytest.raises(ValueError):
+        svc.submit(np.zeros((0, D), np.float32))
+    assert not svc._queue and svc.flush() == 0
+
+    ctrl = AdmissionController(_StaticRegistry(MODELS),
+                               max_batch=MAX_BATCH)
+    with pytest.raises(ValueError):
+        ctrl.submit("m0", np.zeros((0, D), np.float32))
+    assert ctrl.queued_rows("m0") == 0 and ctrl.drain() == 0

@@ -7,6 +7,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+pytestmark = pytest.mark.slow
+
 from repro.core import (SlabSpec, feasible_init, linear, rbf,  # noqa: E402
                         solve_blocked)
 from repro.core.qp_baseline import project_box_hyperplane  # noqa: E402

@@ -1,0 +1,151 @@
+"""Bench-regression gate: diff fresh BENCH_*.json against the committed
+baselines under results/ and fail on missing rows or real slowdowns.
+
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        --pair BENCH_table1.json results/BENCH_table1.json \
+        --pair BENCH_serving.json results/BENCH_serving.json \
+        --tolerance 0.25 --out BENCH_compare.json
+
+Every benchmark JSON is flattened into ``path -> leaf`` entries; list
+elements are identified by their row-identity keys (m, precision, name,
+bucket) when present, so reordering rows never trips the gate while a
+DROPPED row always does. Timing leaves (a key ending in ``_s``, or a
+value nested directly under one — per-bucket tables) are gated:
+
+* a baseline timing missing from the fresh file       -> FAIL (missing row)
+* fresh > baseline * (1 + tolerance)                  -> FAIL (slowdown)
+* baseline under ``--min-seconds``                    -> reported, not
+  gated (interpret-mode micro-timings jitter far beyond any real
+  regression; the floor keeps the gate about trends, not noise)
+
+Non-timing leaves (iteration counts, MCC, speedups) participate in the
+missing-row check only. The full comparison is written to ``--out`` and
+shipped as a CI artifact either way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+# Keys that identify a row inside a list of dicts, in preference order.
+IDENTITY_KEYS = ("m", "precision", "name", "bucket")
+
+
+def _flatten(node, prefix: str, out: Dict[str, object]) -> None:
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _flatten(v, f"{prefix}.{k}" if prefix else str(k), out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            tag = str(i)
+            if isinstance(v, dict):
+                ids = [f"{k}={v[k]}" for k in IDENTITY_KEYS
+                       if k in v and not isinstance(v[k], (dict, list))]
+                if ids:
+                    tag = ",".join(ids)
+            _flatten(v, f"{prefix}[{tag}]", out)
+    else:
+        out[prefix] = node
+
+
+def flatten(doc) -> Dict[str, object]:
+    out: Dict[str, object] = {}
+    _flatten(doc, "", out)
+    return out
+
+
+def _is_timing(path: str) -> bool:
+    """A leaf is a gated timing if its key ends in _s, or it sits directly
+    under a *_s table (per-bucket dicts: warm_per_bucket_s."64")."""
+    segs = [s for s in path.replace("]", "").replace("[", ".").split(".")
+            if s]
+    if not segs:
+        return False
+    if segs[-1].endswith("_s"):
+        return True
+    return len(segs) >= 2 and segs[-2].endswith("_s")
+
+
+def compare_pair(fresh_path: str, baseline_path: str, *, tolerance: float,
+                 min_seconds: float) -> dict:
+    with open(fresh_path) as fh:
+        fresh = flatten(json.load(fh))
+    with open(baseline_path) as fh:
+        baseline = flatten(json.load(fh))
+
+    missing: List[str] = []
+    regressions: List[dict] = []
+    ungated: List[dict] = []
+    checked = 0
+    for path, base_v in sorted(baseline.items()):
+        if path not in fresh:
+            missing.append(path)
+            continue
+        if not (_is_timing(path) and isinstance(base_v, (int, float))):
+            continue
+        new_v = fresh[path]
+        if not isinstance(new_v, (int, float)):
+            missing.append(path)   # shape change: timing became non-numeric
+            continue
+        ratio = (float(new_v) / float(base_v)) if base_v > 0 else 1.0
+        entry = {"path": path, "baseline_s": base_v, "fresh_s": new_v,
+                 "ratio": round(ratio, 3)}
+        if float(base_v) < min_seconds:
+            ungated.append(entry)
+            continue
+        checked += 1
+        if ratio > 1.0 + tolerance:
+            regressions.append(entry)
+
+    return {
+        "fresh": fresh_path,
+        "baseline": baseline_path,
+        "checked_timings": checked,
+        "missing_rows": missing,
+        "regressions": regressions,
+        "below_noise_floor": ungated,
+        "ok": not missing and not regressions,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pair", nargs=2, action="append", required=True,
+                    metavar=("FRESH", "BASELINE"),
+                    dest="pairs", help="fresh JSON vs committed baseline")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional slowdown (default 0.25)")
+    ap.add_argument("--min-seconds", type=float, default=0.05,
+                    help="baseline timings under this are not gated")
+    ap.add_argument("--out", default="BENCH_compare.json",
+                    help="where to write the comparison report")
+    args = ap.parse_args(argv)
+
+    results = [compare_pair(f, b, tolerance=args.tolerance,
+                            min_seconds=args.min_seconds)
+               for f, b in args.pairs]
+    ok = all(r["ok"] for r in results)
+    report = {"ok": ok, "tolerance": args.tolerance,
+              "min_seconds": args.min_seconds, "pairs": results}
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=1)
+
+    for r in results:
+        status = "ok" if r["ok"] else "FAIL"
+        print(f"{status}: {r['fresh']} vs {r['baseline']} — "
+              f"{r['checked_timings']} timings gated, "
+              f"{len(r['missing_rows'])} missing, "
+              f"{len(r['regressions'])} regressions "
+              f"({len(r['below_noise_floor'])} below noise floor)")
+        for path in r["missing_rows"]:
+            print(f"  missing: {path}")
+        for e in r["regressions"]:
+            print(f"  slowdown: {e['path']} {e['baseline_s']:.4f}s -> "
+                  f"{e['fresh_s']:.4f}s ({e['ratio']:.2f}x)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,19 +25,21 @@ import json
 import jax, jax.numpy as jnp
 from repro.core import SlabSpec, rbf
 from repro.core.distributed_smo import solve_blocked_distributed
-from repro.launch.mesh import make_production_mesh
+from repro.core.engine import CollectiveLedger
+from repro.launch.mesh import make_solver_mesh
 from repro.utils import hlo_analysis as H
 
 spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
 out = []
-for multi_pod, axes in ((False, ("data",)), (True, ("pod", "data"))):
-    mesh = make_production_mesh(multi_pod=multi_pod)
+for multi_pod in (False, True):
+    mesh, axes = make_solver_mesh(multi_pod=multi_pod)
     m = 1_048_576
     d = 64
     X = jax.ShapeDtypeStruct((m, d), jnp.float32)
+    ledger = CollectiveLedger()   # fills when .lower() traces the solve
     lowered = jax.jit(lambda X: solve_blocked_distributed(
         X, spec, mesh, data_axes=axes, P_pairs=32, tol=1e-4,
-        fused_stats=True)).lower(X)
+        fused_stats=True, ledger=ledger)).lower(X)
     compiled = lowered.compile()
     text = compiled.as_text()
     comps, entry = H._parse_computations(text)
@@ -65,6 +67,12 @@ for multi_pod, axes in ((False, ("data",)), (True, ("pod", "data"))):
         "m_per_shard": m // (32 if multi_pod else 16),
         "collective_ops_per_iter": n_coll,
         "collective_bytes_per_iter_per_dev": coll_b,
+        # the engine's own trace-time accounting hook, for cross-checking
+        # the HLO-derived numbers above (and for asserting the O(P d)
+        # budget in CI without an HLO parse)
+        "ledger_iter_ops": ledger.iteration_ops,
+        "ledger_iter_bytes": ledger.iteration_bytes,
+        "ledger_init_bytes": ledger.phase_bytes("init"),
         "peak_bytes_per_device": int(mem.argument_size_in_bytes
                                      + mem.output_size_in_bytes
                                      + mem.temp_size_in_bytes
@@ -100,11 +108,14 @@ def main():
             print(f"smo_pod_scale,error,{str(e)[:120]}")
             return
     for r in rows:
+        ledger = (f",ledger_iter_bytes={r['ledger_iter_bytes']}"
+                  if "ledger_iter_bytes" in r else "")
         print(f"smo_pod_scale,mesh={r['mesh']},m={r['m']},"
               f"m_per_shard={r['m_per_shard']},"
               f"coll_ops_per_iter={r['collective_ops_per_iter']},"
               f"coll_bytes_per_iter={r['collective_bytes_per_iter_per_dev']:.0f},"
-              f"peak_gb_per_dev={r['peak_bytes_per_device']/1e9:.3f}")
+              f"peak_gb_per_dev={r['peak_bytes_per_device']/1e9:.3f}"
+              f"{ledger}")
 
 
 if __name__ == "__main__":

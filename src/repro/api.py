@@ -7,7 +7,12 @@ composition of the solver engine for the problem size and hardware:
 * medium m           -> blocked solver, on-the-fly rows (no m^2 memory);
                         the fused Pallas f-update on TPU
 * large m            -> shrinking repack driver around the blocked solver
-* mesh given         -> row-sharded solver over the mesh's data axes
+* mesh given / "sharded" -> row-sharded solver over the mesh's data axes
+                        (per-shard Pallas fupdate on the hot loop); large
+                        m additionally gets the sharded shrinking repack
+                        driver. With no mesh given, "sharded" builds one
+                        from the launch layer
+                        (``repro.launch.mesh.make_solver_mesh``).
 
 Every strategy returns the same ``SMOResult``; explicit strategies are
 available for benchmarks and tests that compare compositions.
@@ -23,7 +28,8 @@ from repro.core.distributed_smo import solve_blocked_distributed
 from repro.core.engine.gram import SINGLE_PASS_MAX
 from repro.core.engine.types import SMOResult
 from repro.core.ocssvm import SlabSpec
-from repro.core.shrinking import solve_blocked_shrinking
+from repro.core.shrinking import (solve_blocked_shrinking,
+                                  solve_sharded_shrinking)
 from repro.core.smo import solve as solve_smo
 
 Array = jax.Array
@@ -32,7 +38,8 @@ Array = jax.Array
 # work drops to the active (support-vector) set.
 _SHRINKING_MIN_M = 8192
 
-STRATEGIES = ("auto", "paper", "mvp", "blocked", "shrinking", "distributed")
+STRATEGIES = ("auto", "paper", "mvp", "blocked", "shrinking", "distributed",
+              "sharded")
 
 
 def _auto_gram_mode(m: int, interpret: Optional[bool] = None) -> str:
@@ -61,19 +68,28 @@ def fit(
     tol: float = 1e-4,
     mesh=None,
     data_axes: Tuple[str, ...] = ("data",),
+    multi_pod: bool = False,
+    ledger=None,
     **kwargs,
 ) -> SMOResult:
     """Train a One-Class Slab SVM; returns an ``SMOResult``.
 
     strategy: "auto" (size/hardware heuristic), "paper" / "mvp" (the
-    sequential Algorithm 1 selectors), "blocked", "shrinking", or
-    "distributed" (requires ``mesh``). interpret: force Pallas
-    interpret mode on (True; CPU CI) or off (False; TPU) for the
-    ``gram_mode="pallas"`` provider instead of auto-detecting the
-    backend. precision: Gram tile-input dtype ("f32" default, "bf16",
-    "f16") — halves kernel HBM traffic; dot products still accumulate
-    f32 (``repro.kernels.precision``; every strategy honors it,
-    including "distributed"). Extra kwargs flow to the chosen solver
+    sequential Algorithm 1 selectors), "blocked", "shrinking",
+    "sharded" (row-sharded engine over a mesh — built from the launch
+    layer via ``make_solver_mesh(multi_pod=...)`` when ``mesh`` is not
+    given; large m composes with the sharded shrinking repack driver),
+    or "distributed" (the plain row-sharded solver; requires ``mesh``).
+    interpret: force Pallas interpret mode on (True; CPU CI) or off
+    (False; TPU) instead of auto-detecting the backend — this reaches
+    the per-shard fupdate kernel for the sharded strategies too.
+    precision: Gram tile-input dtype ("f32" default, "bf16", "f16") —
+    halves kernel HBM traffic; dot products still accumulate f32
+    (``repro.kernels.precision``; every strategy honors it, including
+    the sharded ones). ledger: a
+    ``repro.core.engine.CollectiveLedger`` the sharded strategies fill
+    with per-device collective-bytes accounting (ignored by the local
+    strategies). Extra kwargs flow to the chosen solver
     (max_iters/max_outer, patience, gamma0, ...).
     """
     if spec is None:
@@ -85,7 +101,7 @@ def fit(
 
     if strategy == "auto":
         if mesh is not None:
-            strategy = "distributed"
+            strategy = "sharded"
         elif m > _SHRINKING_MIN_M:
             strategy = "shrinking"
         else:
@@ -100,18 +116,46 @@ def fit(
     elif "max_iters" in kwargs:
         kwargs["max_outer"] = kwargs.pop("max_iters")
 
-    if strategy == "distributed":
-        if mesh is None:
-            raise ValueError("strategy='distributed' needs a mesh")
-        if gram_mode is not None or interpret is not None:
+    if strategy in ("distributed", "sharded"):
+        if gram_mode is not None:
             raise ValueError(
-                "gram_mode/interpret are not configurable for the "
-                "distributed strategy: the sharded provider owns Gram "
-                "access (Pallas-in-shard is a ROADMAP open item)")
+                "gram_mode is not configurable for the sharded/"
+                "distributed strategies: the sharded provider owns Gram "
+                "access (its hot loop is the per-shard Pallas fupdate; "
+                "the local repack solves of the sharded shrinking driver "
+                "pick their own provider)")
+        if strategy == "distributed" and mesh is None:
+            raise ValueError("strategy='distributed' needs a mesh; "
+                             "use strategy='sharded' to build one from "
+                             "the launch layer")
+        if mesh is None:
+            from repro.launch.mesh import make_solver_mesh
+            mesh, data_axes = make_solver_mesh(multi_pod=multi_pod)
+        if strategy == "sharded" and m > _SHRINKING_MIN_M:
+            return solve_sharded_shrinking(X, spec, mesh,
+                                           data_axes=data_axes,
+                                           P_pairs=P, tol=tol,
+                                           precision=precision,
+                                           interpret=interpret,
+                                           ledger=ledger, **kwargs)
+        # Below the shrinking threshold the plain sharded solve runs;
+        # surface a clear error for shrinking-only knobs instead of an
+        # opaque TypeError (the accepted kwargs must not silently change
+        # when a growing dataset crosses the threshold).
+        shrink_only = [k for k in ("warm_iters", "max_rounds",
+                                   "round_iters", "margin", "gather_max")
+                       if k in kwargs]
+        if shrink_only:
+            raise ValueError(
+                f"kwargs {shrink_only} configure the sharded shrinking "
+                f"driver, which only runs for m > {_SHRINKING_MIN_M} "
+                f"(got m={m}); drop them or call "
+                "repro.core.solve_sharded_shrinking directly")
         return solve_blocked_distributed(X, spec, mesh,
                                          data_axes=data_axes, P_pairs=P,
                                          tol=tol, precision=precision,
-                                         **kwargs)
+                                         interpret=interpret,
+                                         ledger=ledger, **kwargs)
 
     gm = gram_mode if gram_mode is not None else _auto_gram_mode(m, interpret)
     if strategy in ("paper", "mvp"):

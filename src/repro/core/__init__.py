@@ -12,11 +12,13 @@ from repro.core.ocssvm import (OCSSVMModel, SlabSpec, compact_support,
 from repro.core.kkt import slab_margin, violation, n_violators, converged
 from repro.core.smo import SMOResult, solve as solve_smo
 from repro.core.batched_smo import solve_blocked
-from repro.core.shrinking import solve_blocked_shrinking
+from repro.core.shrinking import (solve_blocked_shrinking,
+                                  solve_sharded_shrinking)
 from repro.core.qp_baseline import QPResult, project_box_hyperplane, solve_qp
 from repro.core.mcc import mcc
 from repro.core.head import FittedHead, fit_head, pool_features
-from repro.core.distributed_smo import solve_blocked_distributed
+from repro.core.distributed_smo import (sharded_raw_scores,
+                                        solve_blocked_distributed)
 
 __all__ = [
     "engine",
@@ -25,7 +27,8 @@ __all__ = [
     "feasible_init",
     "recover_rhos", "slab_margin", "violation", "n_violators", "converged",
     "SMOResult", "solve_smo", "solve_blocked", "solve_blocked_shrinking",
-    "solve_blocked_distributed", "with_quantile_offsets",
+    "solve_sharded_shrinking", "solve_blocked_distributed",
+    "sharded_raw_scores", "with_quantile_offsets",
     "QPResult", "project_box_hyperplane", "solve_qp", "mcc",
     "FittedHead", "fit_head", "pool_features",
 ]

@@ -53,7 +53,8 @@ from repro.core.engine.gram import (BLOCK, SINGLE_PASS_MAX, OnTheFlyGram,
                                     make_provider, raw_scores_blocked)
 from repro.core.engine.select import (BlockSelector, PaperSelector,
                                       ShardedBlockSelector, make_selector)
-from repro.core.engine.stats import (LOCAL_COMM, LocalComm, MeshComm,
+from repro.core.engine.stats import (LOCAL_COMM, CollectiveLedger,
+                                     CollectiveRecord, LocalComm, MeshComm,
                                      recover_rhos, slab_margin,
                                      solver_stats_fresh, solver_stats_prev,
                                      violation)
@@ -65,7 +66,8 @@ __all__ = [
     "ShardedGram", "raw_scores_blocked", "SINGLE_PASS_MAX", "BLOCK",
     "make_selector", "PaperSelector", "BlockSelector",
     "ShardedBlockSelector",
-    "LocalComm", "MeshComm", "LOCAL_COMM", "recover_rhos", "slab_margin",
+    "LocalComm", "MeshComm", "LOCAL_COMM", "CollectiveLedger",
+    "CollectiveRecord", "recover_rhos", "slab_margin",
     "violation", "solver_stats_fresh", "solver_stats_prev",
     "Selection", "SMOResult", "SolverState",
 ]

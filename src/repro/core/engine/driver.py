@@ -67,13 +67,18 @@ def gauss_seidel_pairs(sel: Selection, Kblk: Array, dsl: Array, *,
 
 
 def init_state(provider, stats_fn: StatsFn, gamma0: Array,
-               f_offset: Optional[Array] = None) -> SolverState:
+               f_offset: Optional[Array] = None,
+               ledger=None) -> SolverState:
     """Score the initial gamma and measure the starting diagnostics.
 
     f_offset: constant per-row score contribution from coordinates OUTSIDE
     this problem (the shrinking driver freezes bound coordinates and solves
     the active subset; their kernel contribution rides along here).
+    ledger: optional ``CollectiveLedger`` — everything traced here is
+    one-time work, so it is tagged phase="init".
     """
+    if ledger is not None:
+        ledger.set_phase("init")
     f = provider.init_scores(gamma0)
     if f_offset is not None:
         f = f + f_offset.astype(f.dtype)
@@ -89,7 +94,7 @@ def init_state(provider, stats_fn: StatsFn, gamma0: Array,
 
 def run(provider, selector, stats_fn: StatsFn, state0: SolverState, *,
         hi: float, lo: float, tol: float, max_iters: int, patience: int,
-        rho_every: int = 1) -> SolverState:
+        rho_every: int = 1, ledger=None) -> SolverState:
     """Iterate select -> pair-solve -> rank-2P update until converged.
 
     Termination (selector.criterion):
@@ -98,7 +103,13 @@ def run(provider, selector, stats_fn: StatsFn, state0: SolverState, *,
       "gap" — Keerthi MVP duality gap <= tol.
     Both additionally stop at max_iters or after ``patience`` consecutive
     zero-progress steps (bound-blocked working sets).
+
+    ledger: optional ``CollectiveLedger``. The while_loop body is traced
+    exactly once, so collectives recorded from here on are tagged
+    phase="iter" — the per-iteration collective bill.
     """
+    if ledger is not None:
+        ledger.set_phase("iter")
     criterion = selector.criterion
     tiny = jnp.asarray(_TINY, state0.f.dtype)
 

@@ -193,18 +193,27 @@ class ShardedGram:
     ``gids`` are this shard's global row ids; selections carry gathered
     (2P, d) row blocks, so the per-iteration update needs no communication
     at all — only ``init_scores`` all-gathers (once, column-blocked).
+    The rank-2P f update runs the SAME fused Pallas ``fupdate`` kernel as
+    the single-device ``PallasGram``, applied to the local rows (interpret
+    mode on CPU; ``interpret=None`` auto-detects like the local provider).
+
+    ``comm`` is the facade's ``MeshComm`` over the data axes: the
+    init-time gathers route through it so the ``CollectiveLedger`` (when
+    attached) sees every collective this provider issues.
 
     Precision invariant: ``X_local`` is tile-rounded at construction
     (idempotent), and the selector feeding this provider must gather its
     candidate rows from the same rounded shard data — the distributed
-    facade rounds once, before building both.
+    facade rounds once, before building both. ``fupdate`` then re-casts
+    the already-rounded rows to the 16-bit stream dtype exactly, so the
+    kernel and jnp paths agree bit-for-bit on the Gram entries.
     """
 
     name = "sharded"
 
     def __init__(self, X_local: Array, kernel: KernelFn, *, gids: Array,
-                 rank: Array, m_local: int, m_pad: int, axes,
-                 precision: str = "f32"):
+                 rank: Array, m_local: int, m_pad: int, comm,
+                 interpret: bool | None = None, precision: str = "f32"):
         self.precision = check_precision(precision)
         self.X = round_to_tile(X_local, precision)
         self.kernel = kernel
@@ -212,14 +221,16 @@ class ShardedGram:
         self.rank = rank
         self.m_local = m_local
         self.m_pad = m_pad
-        self.axes = tuple(axes)
+        self.comm = comm
+        self.axes = comm.axes
+        self.interpret = interpret   # None -> auto (True off-TPU)
 
     def init_scores(self, gamma_local: Array) -> Array:
         # Local f needs the *global* K gamma: gather X and gamma once, then
         # accumulate over column blocks — the full (m_local x m) cross-Gram
         # block would be hundreds of GB at m = 1M.
-        X_all = jax.lax.all_gather(self.X, self.axes, tiled=True)
-        g_all = jax.lax.all_gather(gamma_local, self.axes, tiled=True)
+        X_all = self.comm.all_gather(self.X, tiled=True)
+        g_all = self.comm.all_gather(gamma_local, tiled=True)
         blk = BLOCK
         nblk = (self.m_pad + blk - 1) // blk
         Xp = jnp.pad(X_all, ((0, nblk * blk - self.m_pad), (0, 0)))
@@ -243,12 +254,17 @@ class ShardedGram:
         return self.kernel.diag(sel.X)
 
     def apply_update(self, f: Array, sel: Selection, delta: Array) -> Array:
-        # Rank-2P update of the local rows only — no communication. Same
-        # tile cast as the local providers: self.X is rounded here, and
-        # sel.X carries rows the selector gathered from the SAME rounded
-        # shard data (the distributed facade rounds X_local once, before
-        # building provider and selector).
-        return f + self.kernel.rows(self.X, sel.X) @ delta
+        # Rank-2P update of the local rows only — no communication: the
+        # same fused Pallas pass as PallasGram, per shard. self.X is
+        # tile-rounded here and sel.X carries rows the selector gathered
+        # from the SAME rounded shard data (the distributed facade rounds
+        # X_local once, before building provider and selector), so the
+        # in-kernel cast to the 16-bit stream dtype is exact. fupdate's
+        # internal pads (selected block to a lane multiple, rows/features
+        # to tile multiples) carry zero deltas / zero rows and contribute
+        # exactly 0 to f (tests assert this bitwise, bf16/f16 included).
+        return fupdate(self.X, sel.X, delta, f, self.kernel,
+                       interpret=self.interpret, precision=self.precision)
 
     def scatter(self, gamma: Array, sel: Selection, delta: Array) -> Array:
         loc = sel.ids - self.rank * self.m_local

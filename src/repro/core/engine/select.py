@@ -99,19 +99,25 @@ class BlockSelector:
 
 
 class ShardedBlockSelector:
-    """Globally-consistent block selection from per-shard candidates."""
+    """Globally-consistent block selection from per-shard candidates.
+
+    ``comm`` is the facade's ``MeshComm`` over the data axes; the one
+    per-iteration candidate gather routes through it so the attached
+    ``CollectiveLedger`` accounts its O(P d) payload.
+    """
 
     criterion = "gap"
 
     def __init__(self, X_local: Array, *, P: int, hi: float, lo: float,
-                 gids: Array, valid: Array, axes):
+                 gids: Array, valid: Array, comm):
         self.X = X_local
         self.P = P
         self.hi, self.lo = hi, lo
         self.bnd = 1e-8 * (hi - lo)
         self.gids = gids
         self.valid = valid
-        self.axes = tuple(axes)
+        self.comm = comm
+        self.axes = comm.axes
 
     def select(self, s: SolverState) -> Selection:
         P = self.P
@@ -134,7 +140,7 @@ class ShardedBlockSelector:
                 axis=1)                          # (P, 4 + d)
 
         cand = jnp.stack([pack(up_i, up_val), pack(dn_i, dn_val)])
-        cand_g = jax.lax.all_gather(cand, self.axes, tiled=False)
+        cand_g = self.comm.all_gather(cand, tiled=False)
         # (n_shards, 2, P, 4+d) -> per side (n_shards*P, 4+d)
         cg = cand_g.transpose(1, 0, 2, 3).reshape(2, -1, cand.shape[-1])
         uv, uid = cg[0, :, 0], cg[0, :, 1].astype(jnp.int32)

@@ -27,12 +27,120 @@ must not be derived from local array shapes, which differ under sharding.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRecord:
+    """One collective as seen at trace time: op kind, solve phase, the
+    per-device payload bytes (static — shapes are known when tracing),
+    and the iter epoch (which traced solve's loop body it belongs to)."""
+
+    op: str       # "psum" | "pmax" | "all_gather"
+    phase: str    # "init" (once per solve) | "iter" (once per iteration)
+    nbytes: int   # per-device payload estimate
+    epoch: int = 0   # distinguishes iter phases of successive solves
+
+
+class CollectiveLedger:
+    """Trace-time collective-bytes accounting for the sharded solver.
+
+    Every ``MeshComm`` reduction/gather records (op, phase, bytes) here as
+    it is TRACED. The engine driver traces its ``while_loop`` body exactly
+    once, so the records tagged phase="iter" are the per-iteration
+    collective bill — the O(P d) budget ROADMAP promises — and the
+    "init" records are the one-time start-up cost (the column-blocked
+    all-gather of X and gamma in ``ShardedGram.init_scores`` plus the two
+    initial stats passes).
+
+    Bytes are per-device payload estimates from static shapes: operand
+    bytes for psum/pmax (each device contributes and receives one copy),
+    gathered-output bytes for all_gather. They deliberately ignore the
+    reduction algorithm's constant factor (ring vs tree) — the budget
+    assertions care about the O(P d) vs O(m) distinction, not link-level
+    truth, which only real ICI profiling can provide.
+
+    The ledger fills when the solve is traced; a jit cache hit re-runs
+    the compiled collectives without re-recording (trace-time hook, not a
+    runtime profiler).
+
+    Phases: "init" (once per solve), "iter" (once per iteration), and
+    "sweep" (once per shrinking repack round — the sharded KKT sweep's
+    O(m d) gather, kept out of the per-iteration bill).
+    """
+
+    def __init__(self):
+        self.records: List[CollectiveRecord] = []
+        self._phase = "init"
+        self._iter_epoch = 0
+
+    def set_phase(self, phase: str) -> None:
+        # Entering "iter" starts a new epoch: one ledger threaded through
+        # several solves (the sharded shrinking driver's warm + repack
+        # rounds) then reports the per-iteration bill of ONE solve, not
+        # the sum of every traced loop body.
+        if phase == "iter" and self._phase != "iter":
+            self._iter_epoch += 1
+        self._phase = phase
+
+    def record(self, op: str, nbytes: int) -> None:
+        self.records.append(CollectiveRecord(
+            op, self._phase, int(nbytes),
+            self._iter_epoch if self._phase == "iter" else 0))
+
+    def phase_bytes(self, phase: str) -> int:
+        if phase == "iter":
+            return self.iteration_bytes
+        return sum(r.nbytes for r in self.records if r.phase == phase)
+
+    def phase_ops(self, phase: str) -> int:
+        if phase == "iter":
+            return self.iteration_ops
+        return sum(1 for r in self.records if r.phase == phase)
+
+    def _iter_epochs(self) -> dict:
+        out: dict = {}
+        for r in self.records:
+            if r.phase == "iter":
+                b, n = out.get(r.epoch, (0, 0))
+                out[r.epoch] = (b + r.nbytes, n + 1)
+        return out
+
+    @property
+    def iteration_bytes(self) -> int:
+        """Per-device collective bytes paid by ONE iteration of the most
+        expensive traced solve sharing this ledger (epochs should agree
+        for identical geometry; max is the honest bound)."""
+        ep = self._iter_epochs()
+        return max((b for b, _ in ep.values()), default=0)
+
+    @property
+    def iteration_ops(self) -> int:
+        ep = self._iter_epochs()
+        return max((n for _, n in ep.values()), default=0)
+
+    def summary(self) -> dict:
+        out = {
+            "init_bytes": self.phase_bytes("init"),
+            "init_ops": self.phase_ops("init"),
+            "iteration_bytes": self.iteration_bytes,
+            "iteration_ops": self.iteration_ops,
+        }
+        for phase in sorted({r.phase for r in self.records}
+                            - {"init", "iter"}):
+            out[f"{phase}_bytes"] = self.phase_bytes(phase)
+            out[f"{phase}_ops"] = self.phase_ops(phase)
+        return out
+
+
+def _payload_bytes(x: Array) -> int:
+    return int(x.size) * x.dtype.itemsize
 
 
 class LocalComm:
@@ -48,16 +156,48 @@ class LocalComm:
 
 
 class MeshComm:
-    """Cross-shard combine over mesh data axes (use inside shard_map)."""
+    """Cross-shard combine over mesh data axes (use inside shard_map).
 
-    def __init__(self, axes: Sequence[str]):
+    ``sizes`` (the mesh extent of each axis, in ``axes`` order) and
+    ``ledger`` are optional: with both set, every reduction/gather records
+    its per-device payload into the ``CollectiveLedger`` at trace time.
+    """
+
+    def __init__(self, axes: Sequence[str], *,
+                 sizes: Optional[Sequence[int]] = None,
+                 ledger: Optional[CollectiveLedger] = None):
         self.axes = tuple(axes)
+        self.sizes = None if sizes is None else tuple(int(s) for s in sizes)
+        self.ledger = ledger
+
+    @property
+    def n_shards(self) -> Optional[int]:
+        if self.sizes is None:
+            return None
+        n = 1
+        for s in self.sizes:
+            n *= s
+        return n
+
+    def _record(self, op: str, nbytes: int) -> None:
+        if self.ledger is not None:
+            self.ledger.record(op, nbytes)
 
     def psum(self, x: Array) -> Array:
+        self._record("psum", _payload_bytes(x))
         return jax.lax.psum(x, self.axes)
 
     def pmax(self, x: Array) -> Array:
+        self._record("pmax", _payload_bytes(x))
         return jax.lax.pmax(x, self.axes)
+
+    def all_gather(self, x: Array, *, tiled: bool = True) -> Array:
+        """all_gather over the data axes, with the gathered-output bytes
+        (local bytes x n_shards) recorded as this device's payload."""
+        n = self.n_shards
+        self._record("all_gather",
+                     _payload_bytes(x) * (n if n is not None else 1))
+        return jax.lax.all_gather(x, self.axes, tiled=tiled)
 
 
 LOCAL_COMM = LocalComm()

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.kernel_fn import KernelFn
-from repro.kernels.gram.ops import _auto_interpret, _pad_to
+from repro.kernels.tiling import _auto_interpret, _pad_to
 from repro.kernels.fupdate.kernel import fupdate_pallas
 from repro.kernels.precision import tile_dtype
 

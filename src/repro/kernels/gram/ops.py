@@ -12,7 +12,6 @@ accumulate in f32 on the MXU (see ``repro.kernels.precision``).
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 
 import jax
@@ -21,30 +20,10 @@ import jax.numpy as jnp
 from repro.core.kernel_fn import KernelFn
 from repro.kernels.gram.kernel import gram_pallas
 from repro.kernels.precision import tile_dtype
-
-
-def _pad_to(a, mult, axis):
-    pad = (-a.shape[axis]) % mult
-    if pad == 0:
-        return a
-    widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(a, widths)
-
-
-def _auto_interpret() -> bool:
-    """interpret-mode default: REPRO_INTERPRET env override, else backend.
-
-    CI sets REPRO_INTERPRET=1 so the kernels-interpret job is deterministic
-    regardless of which backend jax resolves. Read at trace time: flip the
-    variable before the first kernel call of the process.
-    """
-    env = os.environ.get("REPRO_INTERPRET", "").strip().lower()
-    if env in ("1", "true", "on"):
-        return True
-    if env in ("0", "false", "off"):
-        return False
-    return jax.default_backend() != "tpu"
+# Re-exported for backward compatibility: these moved to kernels.tiling so
+# sibling kernel families stop importing through this module (import-cycle
+# hazard when repro.kernels is the first package imported).
+from repro.kernels.tiling import _auto_interpret, _pad_to  # noqa: F401
 
 
 @partial(jax.jit, static_argnames=("kernel", "tm", "tn", "tk", "interpret",

@@ -1,0 +1,40 @@
+"""Shared tile plumbing for the Pallas kernel wrappers.
+
+Lives in its own module (no ``repro.core`` dependency) so every kernel
+family — and the engine providers that call them — can import these
+helpers from any entry point without touching the
+``repro.kernels <-> repro.core`` package boundary: importing
+``repro.kernels`` first used to deadlock the partially-initialized
+``gram.ops`` module when ``fupdate.ops`` pulled the helpers from it
+mid-cycle.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_to(a, mult, axis):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _auto_interpret() -> bool:
+    """interpret-mode default: REPRO_INTERPRET env override, else backend.
+
+    CI sets REPRO_INTERPRET=1 so the kernels-interpret job is deterministic
+    regardless of which backend jax resolves. Read at trace time: flip the
+    variable before the first kernel call of the process.
+    """
+    env = os.environ.get("REPRO_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "on"):
+        return True
+    if env in ("0", "false", "off"):
+        return False
+    return jax.default_backend() != "tpu"

@@ -31,3 +31,37 @@ def make_test_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Small meshes for CPU tests (e.g. (1,1) or (2,2))."""
     n = math.prod(shape)
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_solver_mesh(*, multi_pod: bool = False, devices=None):
+    """Mesh + row-sharding axes for the distributed OCSSVM solver.
+
+    This is how ``repro.fit(strategy="sharded")`` gets its mesh from the
+    launch layer instead of hand-rolling one: a fleet that matches the
+    production pod topology gets exactly ``make_production_mesh``
+    ((16, 16) single-pod / (2, 16, 16) multi-pod), and anything smaller —
+    CPU CI under ``--xla_force_host_platform_device_count``, a dev box
+    with a handful of chips — gets the SAME axis structure scaled down to
+    the available devices, so solver code and tests never see different
+    axis names between CI and a pod.
+
+    Returns ``(mesh, data_axes)``: the solver row-shards X/gamma/f over
+    ``data_axes`` (("pod", "data") multi-pod, ("data",) otherwise); the
+    "model" axis, when present, is untouched by the solver (its arrays
+    are replicated over it).
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    if len(devices) >= math.prod((2, 16, 16) if multi_pod else (16, 16)):
+        return make_production_mesh(multi_pod=multi_pod), data_axes
+    n = len(devices)
+    if multi_pod:
+        if n < 2 or n % 2:
+            raise RuntimeError(
+                f"multi_pod solver mesh needs an even device count >= 2, "
+                f"found {n}")
+        mesh = jax.make_mesh((2, n // 2, 1), ("pod", "data", "model"),
+                             devices=devices)
+    else:
+        mesh = jax.make_mesh((n, 1), ("data", "model"), devices=devices)
+    return mesh, data_axes

@@ -7,20 +7,16 @@ import subprocess
 import sys
 import textwrap
 
+import numpy as np
 import pytest
 
-REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+# The documented per-dtype tolerance floors, shared with the kernel and
+# engine parity suites (importing jax here is fine — the main process
+# just has to stay single-device, which importing does not change).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.kernels.precision import truth_tolerance  # noqa: E402
 
-
-def _run(code: str, devices: int = 4) -> dict:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = REPO_SRC
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=900)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
+from conftest import REPO_SRC, run_forced_devices as _run  # noqa: E402
 
 
 def test_distributed_smo_matches_single_device():
@@ -155,6 +151,179 @@ def test_moe_shard_map_matches_global_path():
     # balance loss per group) — close to, but not identical with, the
     # global-batch statistic.
     assert res["aux0"] == pytest.approx(res["aux1"], rel=0.25, abs=0.05)
+
+
+def test_sharded_shrinking_matches_blocked_and_collective_budget():
+    """The row-sharded shrinking repack driver must land on the same slab
+    as the single-device blocked solver for every (kernel, precision)
+    cell — objective AND both offsets, within the documented per-dtype
+    truth tolerances plus the solver-convergence floor — and the engine's
+    collective-bytes ledger must certify the O(P d) per-iteration budget:
+    bytes independent of m, bounded by c * P * d with c covering the
+    candidate-packing constant (4 scalar lanes per row) and the shard
+    fan-in. One subprocess covers the whole matrix: jax start-up is paid
+    once."""
+    res = _run("""
+        import json
+        import jax, jax.numpy as jnp
+        from repro.core import (SlabSpec, rbf, linear, solve_blocked,
+                                dual_objective)
+        from repro.core.distributed_smo import solve_blocked_distributed
+        from repro.core.engine import CollectiveLedger
+        from repro.core.shrinking import solve_sharded_shrinking
+        from repro.data import make_toy
+        from repro.launch.mesh import make_solver_mesh
+
+        mesh, axes = make_solver_mesh()
+        kernels = {"rbf": rbf(gamma=0.5), "linear": linear()}
+        out = {"cells": {}}
+        X, _ = make_toy(jax.random.PRNGKey(2), 1024)
+        for kname, kern in kernels.items():
+            spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=kern)
+            K = spec.kernel.gram(X.astype(jnp.float32))
+            for precision in ("f32", "bf16"):
+                r_shr = solve_sharded_shrinking(
+                    X, spec, mesh, data_axes=axes, P_pairs=8, tol=1e-4,
+                    warm_iters=60, precision=precision)
+                r_blk = solve_blocked(X, spec, P=8, tol=1e-4,
+                                      precision=precision)
+                out["cells"][f"{kname}-{precision}"] = {
+                    "obj_shr": float(dual_objective(r_shr.model.gamma, K)),
+                    "obj_blk": float(dual_objective(r_blk.model.gamma, K)),
+                    "rho_shr": [float(r_shr.model.rho1),
+                                float(r_shr.model.rho2)],
+                    "rho_blk": [float(r_blk.model.rho1),
+                                float(r_blk.model.rho2)],
+                    "converged": bool(r_shr.converged),
+                }
+
+        # Collective budget: per-iteration bytes from the stats-hook
+        # ledger must not depend on m and must stay <= c * P * d.
+        spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
+        P_pairs, d = 8, X.shape[1]
+        iter_bytes = {}
+        for m in (256, 2048):
+            Xm, _ = make_toy(jax.random.PRNGKey(3), m)
+            led = CollectiveLedger()
+            solve_blocked_distributed(Xm, spec, mesh, data_axes=axes,
+                                      P_pairs=P_pairs, tol=1e-3,
+                                      max_outer=50, ledger=led)
+            iter_bytes[m] = led.iteration_bytes
+        n_shards = 1
+        for ax in axes:
+            n_shards *= int(mesh.shape[ax])
+        out["iter_bytes"] = iter_bytes
+        out["P"] = P_pairs
+        out["d"] = d
+        out["n_shards"] = n_shards
+
+        # Pod-mesh wiring: multi_pod=True on 8 devices must give the
+        # scaled-down (2, 4) ("pod", "data") topology and land on the
+        # same optimum as the single-device solver.
+        mesh2, axes2 = make_solver_mesh(multi_pod=True)
+        Xs, _ = make_toy(jax.random.PRNGKey(3), 256)
+        Ks = spec.kernel.gram(Xs.astype(jnp.float32))
+        r_pod = solve_blocked_distributed(Xs, spec, mesh2,
+                                          data_axes=axes2, P_pairs=8,
+                                          tol=1e-4)
+        r_loc = solve_blocked(Xs, spec, P=8, tol=1e-4)
+        out["pod"] = {
+            "axes": list(axes2),
+            "shape": [int(mesh2.shape[a]) for a in axes2],
+            "obj_pod": float(dual_objective(r_pod.model.gamma, Ks)),
+            "obj_loc": float(dual_objective(r_loc.model.gamma, Ks)),
+            "converged": bool(r_pod.converged),
+        }
+        print(json.dumps(out))
+    """, devices=8)
+    pod = res["pod"]
+    assert pod["axes"] == ["pod", "data"] and pod["shape"] == [2, 4]
+    assert pod["converged"]
+    assert pod["obj_pod"] == pytest.approx(pod["obj_loc"], abs=2e-3)
+    for cell, c in res["cells"].items():
+        assert c["converged"], cell
+        # floors mirror tests/test_engine_parity.py (SOLVER_ATOL_FLOOR on
+        # top of the per-dtype kernel tolerances)
+        precision = cell.split("-")[1]
+        tol_obj = truth_tolerance(precision, np.asarray([c["obj_blk"]]))
+        np.testing.assert_allclose(
+            c["obj_shr"], c["obj_blk"], rtol=tol_obj["rtol"],
+            atol=max(tol_obj["atol"], 5e-3), err_msg=cell)
+        tol_rho = truth_tolerance(precision, np.asarray(c["rho_blk"]))
+        np.testing.assert_allclose(
+            np.asarray(c["rho_shr"]), np.asarray(c["rho_blk"]),
+            rtol=tol_rho["rtol"], atol=max(tol_rho["atol"], 5e-3),
+            err_msg=cell)
+
+    # O(P d) budget: the candidate gather packs (value, gid, gamma, f)
+    # plus the d features per row, both sides, every shard — so
+    # c = 8 * n_shards * (1 + 4/d) covers it with 2x headroom; the fused
+    # psum/pmax pair adds O(1). Crucially the bill is IDENTICAL across m.
+    bytes_by_m = set(res["iter_bytes"].values())
+    assert len(bytes_by_m) == 1, f"iter bytes vary with m: {res['iter_bytes']}"
+    P_pairs, d, n_shards = res["P"], res["d"], res["n_shards"]
+    budget = 4 * n_shards * P_pairs * (d + 4) * 4 + 256
+    assert bytes_by_m.pop() <= budget
+
+
+def test_two_process_jax_distributed_smoke():
+    """2-process jax.distributed bring-up on CPU: both processes must
+    initialize against one coordinator, see the global 2-device topology,
+    and — where the jax build supports cross-process CPU collectives —
+    agree on a process_allgather. jax 0.4.37 (the CI floor) reports
+    multiprocess CPU computations as unimplemented; the smoke still gates
+    coordinator + topology there."""
+    import socket
+
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+
+    child = textwrap.dedent("""
+        import json, sys
+        import jax
+        pid = int(sys.argv[1])
+        jax.distributed.initialize(
+            coordinator_address=f"127.0.0.1:{port}",
+            num_processes=2, process_id=pid)
+        import jax.numpy as jnp
+        allgather = None
+        try:
+            import jax.experimental.multihost_utils as mhu
+            g = mhu.process_allgather(jnp.full((1,), float(pid + 1)))
+            allgather = [float(x) for x in g.ravel()]
+        except Exception as e:
+            if "aren't implemented on the CPU backend" not in str(e):
+                raise
+        print(json.dumps({
+            "pid": pid,
+            "processes": jax.process_count(),
+            "devices": jax.device_count(),
+            "local_devices": jax.local_device_count(),
+            "allgather": allgather,
+        }))
+    """.replace("{port}", str(port)))
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)   # 1 local CPU device per process
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = REPO_SRC
+    procs = [subprocess.Popen([sys.executable, "-c", child, str(i)],
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True, env=env)
+             for i in range(2)]
+    results = []
+    for p in procs:
+        out, err = p.communicate(timeout=300)
+        assert p.returncode == 0, err[-3000:]
+        results.append(json.loads(out.strip().splitlines()[-1]))
+    for r in results:
+        assert r["processes"] == 2
+        assert r["devices"] == 2          # global view spans both procs
+        assert r["local_devices"] == 1
+        if r["allgather"] is not None:
+            assert r["allgather"] == [1.0, 2.0]
 
 
 def test_compressed_gradient_allreduce():

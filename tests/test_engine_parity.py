@@ -243,3 +243,69 @@ def test_provider_rejects_unknown_precision(toy):
     with pytest.raises(ValueError):
         solve_blocked(X, SPEC, P=4, gram_mode="precomputed",
                       precision="fp8", tol=1e-2)
+
+
+# -- sharded engine cells ---------------------------------------------------
+# The sharded provider/selector need >1 device, and jax pins the device
+# count at first import, so each cell runs in a forced-device subprocess
+# (the shared harness in conftest.py). One subprocess per precision keeps
+# the jax start-up cost at one import per cell while still giving CI a
+# distinct pass/fail signal per dtype.
+
+from conftest import run_forced_devices  # noqa: E402
+
+
+@pytest.mark.parametrize("precision", ["f32", "bf16", "f16"])
+def test_sharded_engine_parity_matches_blocked(precision):
+    """repro.fit(strategy="sharded") on an 8-forced-device launch-layer
+    mesh must reach the single-device blocked optimum at every supported
+    Gram tile precision — objective AND both slab offsets — and the hot
+    loop must actually run the per-shard Pallas fupdate kernel (counted
+    via the engine module's symbol, which ShardedGram.apply_update
+    resolves at trace time)."""
+    res = run_forced_devices(f"""
+        import json
+        import jax, jax.numpy as jnp
+        import repro
+        import repro.core.engine.gram as eg
+        from repro.core import SlabSpec, rbf, solve_blocked, dual_objective
+        from repro.data import make_toy
+
+        calls = {{"n": 0}}
+        real_fupdate = eg.fupdate
+        def counting(*a, **k):
+            calls["n"] += 1
+            return real_fupdate(*a, **k)
+        eg.fupdate = counting
+
+        precision = {precision!r}
+        X, _ = make_toy(jax.random.PRNGKey(5), 96)
+        spec = SlabSpec(nu1=0.5, nu2=0.05, eps=0.5, kernel=rbf(gamma=0.5))
+        K = spec.kernel.gram(X.astype(jnp.float32))
+        rs = repro.fit(X, spec, strategy="sharded", P=4, tol=1e-4,
+                       precision=precision)
+        rb = solve_blocked(X, spec, P=4, tol=1e-4, precision=precision)
+        print(json.dumps({{
+            "obj_sharded": float(dual_objective(rs.model.gamma, K)),
+            "obj_blocked": float(dual_objective(rb.model.gamma, K)),
+            "rho_sharded": [float(rs.model.rho1), float(rs.model.rho2)],
+            "rho_blocked": [float(rb.model.rho1), float(rb.model.rho2)],
+            "sum_gamma": float(rs.model.gamma.sum()),
+            "expected_sum": spec.total(),
+            "converged": bool(rs.converged),
+            "fupdate_calls": calls["n"],
+            "n_devices": jax.device_count(),
+        }}))
+    """, devices=8)
+    assert res["n_devices"] == 8
+    assert res["converged"]
+    assert res["fupdate_calls"] > 0, "sharded hot loop bypassed Pallas"
+    assert res["sum_gamma"] == pytest.approx(res["expected_sum"], abs=1e-4)
+    tol_obj = truth_tolerance(precision, np.asarray([res["obj_blocked"]]))
+    np.testing.assert_allclose(
+        res["obj_sharded"], res["obj_blocked"], rtol=tol_obj["rtol"],
+        atol=max(tol_obj["atol"], SOLVER_ATOL_FLOOR))
+    tol_rho = truth_tolerance(precision, np.asarray(res["rho_blocked"]))
+    np.testing.assert_allclose(
+        np.asarray(res["rho_sharded"]), np.asarray(res["rho_blocked"]),
+        rtol=tol_rho["rtol"], atol=max(tol_rho["atol"], SOLVER_ATOL_FLOOR))

@@ -97,6 +97,42 @@ def test_fupdate_zero_delta_is_identity():
     np.testing.assert_allclose(np.asarray(out), np.asarray(f), atol=1e-6)
 
 
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_fupdate_pad_region_contributes_exactly_zero(kern, precision):
+    """fupdate internally pads the selected block to a lane multiple (and
+    rows/features to tile multiples) with zeros. The padded columns carry
+    delta == 0, so they must contribute EXACTLY 0 to the f-cache — even
+    for RBF, where a zero-padded selected row still has a nonzero kernel
+    value against every x (exp(-gamma ||x||^2)), and even in bf16/f16,
+    where the norms are computed from the rounded rows (a rounded zero row
+    is still exactly zero, so the norms-of-rounded-rows path cannot leak
+    a nonzero product into the padded columns). Asserted bitwise: the
+    same call with MANUALLY zero-padded (xsel, delta) — crossing the 128
+    lane boundary, so the pad geometry actually changes — must return
+    f_new bit-for-bit identical to the unpadded call. This is what makes
+    ShardedGram.apply_update's per-shard fupdate safe under tile
+    rounding."""
+    m, d, s = 96, 17, 5          # none of them tile-aligned
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    X = jax.random.normal(keys[0], (m, d), jnp.float32)
+    Xs = X[:s]
+    delta = jax.random.normal(keys[1], (s,), jnp.float32) * 0.1
+    f = jax.random.normal(keys[2], (m,), jnp.float32)
+
+    out = fupdate(X, Xs, delta, f, kern, interpret=True,
+                  precision=precision)
+    # Push the selected block past the next lane multiple with explicit
+    # zero rows / zero deltas: fupdate now pads to 256 instead of 128.
+    extra = 128
+    Xs_pad = jnp.concatenate([Xs, jnp.zeros((extra, d), jnp.float32)])
+    delta_pad = jnp.concatenate([delta, jnp.zeros((extra,), jnp.float32)])
+    out_pad = fupdate(X, Xs_pad, delta_pad, f, kern, interpret=True,
+                      precision=precision)
+    assert bool(jnp.all(out == out_pad)), (
+        f"zero-padded selected rows perturbed f ({precision})")
+
+
 # -- mixed-precision parity matrix ------------------------------------------
 # Each cell checks two things: (1) the Pallas kernel matches the
 # dtype-parameterized ref at near-f32 tolerance (both see identical input

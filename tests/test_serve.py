@@ -318,11 +318,16 @@ def test_fit_threads_interpret_to_pallas_provider(monkeypatch):
     assert np.isfinite(float(res.gap))
 
 
-def test_fit_distributed_rejects_interpret():
+def test_fit_sharded_rejects_gram_mode():
+    """The sharded strategies own Gram access (per-shard Pallas fupdate);
+    gram_mode must be rejected before any mesh work happens. interpret is
+    NOT rejected anymore — it now reaches the per-shard kernel."""
     X, _ = make_toy(jax.random.PRNGKey(5), 32)
     with pytest.raises(ValueError):
         repro.fit(X, SPEC, strategy="distributed", mesh=object(),
-                  interpret=True)
+                  gram_mode="pallas")
+    with pytest.raises(ValueError):
+        repro.fit(X, SPEC, strategy="sharded", gram_mode="precomputed")
 
 
 def test_example_has_no_direct_kernel_imports():

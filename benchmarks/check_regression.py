@@ -17,6 +17,11 @@ value nested directly under one — per-bucket tables) are gated:
 * baseline under ``--min-seconds``                    -> reported, not
   gated (interpret-mode micro-timings jitter far beyond any real
   regression; the floor keeps the gate about trends, not noise)
+* path not matching ``--gate-only`` (when given)      -> reported, not
+  gated. The autotune pair uses this to gate only the ``winners`` rows:
+  a winner's ``best_s`` is a min over every candidate x repeat, stable
+  enough for a 25% gate, while individual per-candidate ``time_s`` rows
+  jitter far beyond it — those still fail the job when DROPPED.
 
 Non-timing leaves (iteration counts, MCC, speedups) participate in the
 missing-row check only. The full comparison is written to ``--out`` and
@@ -26,8 +31,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 # Keys that identify a row inside a list of dicts, in preference order.
 IDENTITY_KEYS = ("m", "precision", "name", "bucket")
@@ -69,7 +75,8 @@ def _is_timing(path: str) -> bool:
 
 
 def compare_pair(fresh_path: str, baseline_path: str, *, tolerance: float,
-                 min_seconds: float) -> dict:
+                 min_seconds: float,
+                 gate_only: Optional[str] = None) -> dict:
     with open(fresh_path) as fh:
         fresh = flatten(json.load(fh))
     with open(baseline_path) as fh:
@@ -92,7 +99,8 @@ def compare_pair(fresh_path: str, baseline_path: str, *, tolerance: float,
         ratio = (float(new_v) / float(base_v)) if base_v > 0 else 1.0
         entry = {"path": path, "baseline_s": base_v, "fresh_s": new_v,
                  "ratio": round(ratio, 3)}
-        if float(base_v) < min_seconds:
+        if float(base_v) < min_seconds or (
+                gate_only is not None and not re.search(gate_only, path)):
             ungated.append(entry)
             continue
         checked += 1
@@ -119,16 +127,21 @@ def main(argv=None) -> int:
                     help="allowed fractional slowdown (default 0.25)")
     ap.add_argument("--min-seconds", type=float, default=0.05,
                     help="baseline timings under this are not gated")
+    ap.add_argument("--gate-only", default=None, metavar="REGEX",
+                    help="gate only timing paths matching this regex "
+                         "(missing-row checks still cover everything)")
     ap.add_argument("--out", default="BENCH_compare.json",
                     help="where to write the comparison report")
     args = ap.parse_args(argv)
 
     results = [compare_pair(f, b, tolerance=args.tolerance,
-                            min_seconds=args.min_seconds)
+                            min_seconds=args.min_seconds,
+                            gate_only=args.gate_only)
                for f, b in args.pairs]
     ok = all(r["ok"] for r in results)
     report = {"ok": ok, "tolerance": args.tolerance,
-              "min_seconds": args.min_seconds, "pairs": results}
+              "min_seconds": args.min_seconds, "gate_only": args.gate_only,
+              "pairs": results}
     with open(args.out, "w") as fh:
         json.dump(report, fh, indent=1)
 

@@ -1,8 +1,20 @@
-"""Render the dry-run sweep (results/dryrun/*.json) as the roofline table.
+"""Render the repo's roofline rows from the committed results/ layout.
 
-One row per (arch x shape x mesh): the three terms, dominant bottleneck,
-MODEL_FLOPS/HLO_FLOPs ratio, per-device memory, and fit-16GB flag. This is
-the generator for EXPERIMENTS.md §Roofline.
+Two sections, each skipped cleanly when its input is absent:
+
+* the launch-layer dry-run sweep (``results/dryrun/*.json``, produced by
+  ``python -m repro.launch.dryrun --all --out results/dryrun``): one row
+  per (arch x shape x mesh) with the three roofline terms, the dominant
+  bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, per-device memory and the
+  fit-16GB flag;
+* the kernel-autotune winners (``results/BENCH_autotune.json``, produced
+  by ``benchmarks/autotune_kernels.py``): one row per
+  (family x shape x precision) with the winning tile config, its
+  analytic FLOPs / HBM bytes and the DMA-vs-compute classification
+  (docs/kernels.md explains how to read these).
+
+Usage: ``PYTHONPATH=src python benchmarks/roofline_report.py``;
+``DRYRUN_RESULTS`` / ``AUTOTUNE_RESULTS`` override the input paths.
 """
 from __future__ import annotations
 
@@ -11,6 +23,7 @@ import json
 import os
 
 RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+AUTOTUNE = os.environ.get("AUTOTUNE_RESULTS", "results/BENCH_autotune.json")
 
 
 def load(results_dir=RESULTS):
@@ -40,18 +53,43 @@ def fmt_row(r):
             f"fits16gb={mem['fits_16gb_hbm']}")
 
 
+def fmt_autotune_row(w):
+    blocks = "/".join(f"{k[6:]}{w[k]}" for k in
+                      ("block_m", "block_n", "block_k")
+                      if w.get(k) is not None)
+    intensity = w["flops"] / w["hbm_bytes"] if w["hbm_bytes"] else 0.0
+    return (f"{w['family']},m{w['m']}xn{w['n']}xd{w['d']},{w['precision']},"
+            f"{blocks},x{w['depth']},bound={w['bound']},"
+            f"flops={w['flops']:.3g},hbm={w['hbm_bytes']:.3g},"
+            f"intensity={intensity:.1f}flop/B,best={w['best_s']*1e6:.0f}us")
+
+
 def main():
     rows = load()
     if not rows:
-        print("roofline_report,no_results_yet,"
+        print("roofline_report,dryrun,no_results_yet,"
               "run: python -m repro.launch.dryrun --all --out results/dryrun")
+    else:
+        ok = sum(1 for r in rows if r["status"] == "ok")
+        sk = sum(1 for r in rows if r["status"] == "skipped")
+        fl = sum(1 for r in rows if r["status"] == "failed")
+        print(f"roofline_report,dryrun,cells={len(rows)},ok={ok},"
+              f"skipped={sk},failed={fl}")
+        for r in rows:
+            print(fmt_row(r))
+
+    if not os.path.exists(AUTOTUNE):
+        print("roofline_report,autotune,no_results_yet,"
+              "run: python benchmarks/autotune_kernels.py --quick "
+              f"--json {AUTOTUNE}")
         return
-    ok = sum(1 for r in rows if r["status"] == "ok")
-    sk = sum(1 for r in rows if r["status"] == "skipped")
-    fl = sum(1 for r in rows if r["status"] == "failed")
-    print(f"roofline_report,cells={len(rows)},ok={ok},skipped={sk},failed={fl}")
-    for r in rows:
-        print(fmt_row(r))
+    with open(AUTOTUNE) as f:
+        doc = json.load(f)
+    winners = doc.get("winners", [])
+    print(f"roofline_report,autotune,backend={doc.get('backend')},"
+          f"mode={doc.get('mode')},winners={len(winners)}")
+    for w in winners:
+        print(fmt_autotune_row(w))
 
 
 if __name__ == "__main__":

@@ -38,8 +38,8 @@ Array = jax.Array
 # work drops to the active (support-vector) set.
 _SHRINKING_MIN_M = 8192
 
-STRATEGIES = ("auto", "paper", "mvp", "blocked", "shrinking", "distributed",
-              "sharded")
+STRATEGIES = ("auto", "paper", "mvp", "blocked", "pallas", "shrinking",
+              "distributed", "sharded")
 
 
 def _auto_gram_mode(m: int, interpret: Optional[bool] = None) -> str:
@@ -75,7 +75,10 @@ def fit(
     """Train a One-Class Slab SVM; returns an ``SMOResult``.
 
     strategy: "auto" (size/hardware heuristic), "paper" / "mvp" (the
-    sequential Algorithm 1 selectors), "blocked", "shrinking",
+    sequential Algorithm 1 selectors), "blocked", "pallas" (the blocked
+    solver pinned to the Pallas Gram/fupdate provider — tile sizes come
+    from the committed autotune table, ``kernels/tuned_configs.json``,
+    unless ``REPRO_NO_AUTOTUNE=1``; see docs/kernels.md), "shrinking",
     "sharded" (row-sharded engine over a mesh — built from the launch
     layer via ``make_solver_mesh(multi_pod=...)`` when ``mesh`` is not
     given; large m composes with the sharded shrinking repack driver),
@@ -156,6 +159,16 @@ def fit(
                                          tol=tol, precision=precision,
                                          interpret=interpret,
                                          ledger=ledger, **kwargs)
+
+    if strategy == "pallas":
+        if gram_mode is not None and gram_mode != "pallas":
+            raise ValueError(
+                f"strategy='pallas' pins gram_mode='pallas'; got "
+                f"gram_mode={gram_mode!r} — drop it or use "
+                f"strategy='blocked'")
+        return solve_blocked(X, spec, P=P, gram_mode="pallas",
+                             interpret=interpret, precision=precision,
+                             tol=tol, **kwargs)
 
     gm = gram_mode if gram_mode is not None else _auto_gram_mode(m, interpret)
     if strategy in ("paper", "mvp"):

@@ -5,7 +5,14 @@ fupdate  — fused kernel-row evaluation + rank-2P f-cache update (SMO inner loo
 decision — batched slab decision function (serving hot path)
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper, interpret=True on CPU), ref.py (pure-jnp oracle).
+wrapper, interpret=True on CPU), ref.py (pure-jnp oracle). Shared
+policy lives beside them: ``tiling`` (padding, interpret detection, and
+trace-time tile-config resolution from the committed autotune table
+``tuned_configs.json``; ``REPRO_NO_AUTOTUNE=1`` opts out),
+``precision`` (the "f32"/"bf16"/"f16" tile-stream knob) and
+``autotune`` (the sweep that produces the table — imported by
+``benchmarks/autotune_kernels.py``, deliberately not re-exported here).
+See docs/kernels.md.
 """
 from repro.kernels.gram.ops import gram
 from repro.kernels.fupdate.ops import fupdate

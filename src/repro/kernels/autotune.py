@@ -1,0 +1,406 @@
+"""Tile-config autotuner for the three Pallas kernel families.
+
+Sweeps (block_m, block_n, block_k, buffer depth) per
+(family, shape, precision, backend) cell, times each feasible candidate
+through the real ``ops.py`` wrappers (explicit block kwargs, so the
+sweep itself never consults the table it is producing), classifies every
+candidate as DMA-bound vs compute-bound on the ``utils/roofline.py``
+three-term model, and commits the winners to the table
+``kernels/tuned_configs.json`` that ``kernels.tiling.resolve_tiles``
+consults at trace time.
+
+The moving parts:
+
+* :func:`candidates` — the feasible config space for one cell: block
+  dims are multiples of 128 capped at the padded problem dims, and a
+  VMEM model (``depth`` in-flight copies of every streamed tile + the
+  resident accumulator) rejects configs that blow the ~16 MB/core
+  budget. ``depth`` (double vs quad buffering) is swept only on real
+  TPU backends: interpret mode has no DMA pipeline, so depth-4 rows
+  would just duplicate depth-2 timings.
+* :func:`cost_model` — analytic FLOPs and HBM bytes for one candidate,
+  including the tile re-streaming the grid actually does (e.g. the gram
+  x-panel is re-read once per column tile, so bigger ``block_n`` cuts
+  HBM traffic — the whole reason the sweep finds non-default winners).
+* :func:`classify` — roofline terms from those two numbers
+  (``utils.roofline.terms``; collective = 0 for single-chip kernels);
+  ``bound`` is the dominant term ("memory" = DMA-bound, "compute").
+* :func:`sweep` — run a list of :class:`Cell` s, emit candidate + winner
+  rows in the ``results/BENCH_autotune.json`` schema.
+* :func:`winners_to_entries` / :func:`write_table` — turn winners into
+  the committed table format and merge them into ``tuned_configs.json``
+  (existing entries for other keys are preserved).
+
+Wall-clock caveat: on CPU the kernels run in interpret mode, so the
+timings are emulation numbers — stable enough to rank configs and to
+serve as regression canaries (the CI gate), but not TPU projections.
+The table is therefore keyed by backend, and an interpret-produced
+table never steers real TPU launches (``tiling.backend_name``).
+
+Entry points: ``benchmarks/autotune_kernels.py`` (CLI: quick/full
+sweeps, BENCH JSON, ``--update-table``); docs/kernels.md documents the
+produce/consume cycle.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_fn import rbf
+from repro.kernels.decision.ops import decision
+from repro.kernels.fupdate.ops import fupdate
+from repro.kernels.gram.ops import gram
+from repro.kernels.precision import check_precision, tile_dtype
+from repro.kernels.tiling import (DEPTHS, LANE, TUNED_TABLE_PATH,
+                                  _auto_interpret, backend_name)
+from repro.utils.roofline import terms
+
+# VMEM feasibility budget: ~16 MB/core on v5e, keep 10% headroom for
+# semaphores/control.
+VMEM_BUDGET_BYTES = int(16 * 1024 * 1024 * 0.9)
+
+# Block-size menu per axis (capped at the padded problem dim per cell).
+BLOCK_CHOICES = (128, 256, 512)
+FUPDATE_BM_CHOICES = (128, 256, 512, 1024)
+
+
+@dataclass(frozen=True)
+class Cell:
+    """One sweep cell: a (family, shape) point.
+
+    Shape semantics per family — ``m`` is always the table-key row count:
+      gram:     m x n Gram block, d features (training: n == m).
+      fupdate:  m training rows, n = selected-block size (2P), d features.
+      decision: m support rows, n query rows, d features.
+    """
+
+    family: str
+    m: int
+    n: int
+    d: int
+
+
+# The shapes the solver/serving paths actually launch (see
+# docs/kernels.md): quick mode covers the tier-1/CI sizes, full mode
+# adds larger m and wider d so nearest-shape lookups interpolate.
+QUICK_CELLS = (
+    Cell("gram", 512, 512, 16),
+    Cell("fupdate", 512, 16, 16),
+    Cell("decision", 512, 128, 16),
+)
+FULL_CELLS = QUICK_CELLS + (
+    Cell("gram", 1024, 1024, 64),
+    Cell("gram", 2048, 2048, 16),
+    Cell("fupdate", 1024, 16, 64),
+    Cell("fupdate", 2048, 32, 16),
+    Cell("decision", 1024, 256, 64),
+    Cell("decision", 4096, 256, 16),
+)
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _block_menu(dim: int, choices: Sequence[int]) -> List[int]:
+    """Feasible block sizes for one axis: multiples of 128 from the menu,
+    capped at the padded dim (a block larger than the padded problem only
+    inflates zero-padding work)."""
+    cap = _ceil_to(max(dim, 1), LANE)
+    out = [c for c in choices if c <= cap]
+    return out or [LANE]
+
+
+def vmem_bytes(cell: Cell, *, block_m: int, block_n: Optional[int],
+               block_k: Optional[int], depth: int, precision: str) -> int:
+    """Per-grid-step VMEM footprint: ``depth`` in-flight copies of every
+    streamed tile plus the resident f32 accumulator/output tile."""
+    dtb = jnp.dtype(tile_dtype(precision)).itemsize
+    if cell.family == "gram":
+        stream = (block_m * block_k + block_n * block_k) * dtb \
+            + (block_m + block_n) * 4
+        resident = block_m * block_n * 4
+    elif cell.family == "fupdate":
+        sp = _ceil_to(cell.n, LANE)
+        kb = block_k
+        stream = (block_m * kb + sp * kb) * dtb + (2 * block_m + 2 * sp) * 4
+        resident = block_m * sp * 4 + block_m * 4
+    elif cell.family == "decision":
+        dp = _ceil_to(cell.d, LANE)
+        stream = (block_m * dp + block_n * dp) * dtb + 2 * block_n * 4
+        resident = block_m * 4 * 2
+    else:
+        raise ValueError(f"unknown family {cell.family!r}")
+    return depth * stream + resident
+
+
+def cost_model(cell: Cell, *, block_m: int, block_n: Optional[int],
+               block_k: Optional[int], precision: str) -> tuple:
+    """(flops, hbm_bytes) for one candidate.
+
+    FLOPs count the logical (unpadded) work; HBM bytes count the padded
+    operand panels times the number of times the grid actually streams
+    them (tile reuse is what the block sizes trade off).
+    """
+    dtb = jnp.dtype(tile_dtype(precision)).itemsize
+    if cell.family == "gram":
+        m, n, d = cell.m, cell.n, cell.d
+        mp, np_, dp = (_ceil_to(m, block_m), _ceil_to(n, block_n),
+                       _ceil_to(d, block_k))
+        flops = 2.0 * m * n * d
+        hbm = (mp * dp * dtb * (np_ // block_n)      # x, once per col tile
+               + np_ * dp * dtb * (mp // block_m)    # y, once per row tile
+               + mp * np_ * 4.0                      # output, written once
+               + (mp + np_) * 4.0)                   # norms
+    elif cell.family == "fupdate":
+        m, s, d = cell.m, cell.n, cell.d
+        mp, sp, dp = _ceil_to(m, block_m), _ceil_to(s, LANE), \
+            _ceil_to(d, block_k)
+        ni = mp // block_m
+        flops = 2.0 * m * s * d + 2.0 * m * s
+        hbm = (mp * dp * dtb                         # x, streamed once
+               + sp * dp * dtb * ni                  # xsel, per row tile
+               + 3.0 * mp * 4.0                      # f in, f out, norms
+               + ni * 2.0 * sp * 4.0)                # delta + sel norms
+    elif cell.family == "decision":
+        msv, nq, d = cell.m, cell.n, cell.d
+        qp, mp, dp = (_ceil_to(nq, block_m), _ceil_to(msv, block_n),
+                      _ceil_to(d, LANE))
+        ni = qp // block_m
+        flops = 2.0 * nq * msv * d + 2.0 * nq * msv
+        hbm = (qp * dp * dtb                         # q, once per row tile
+               + mp * dp * dtb * ni                  # t, per query tile
+               + 2.0 * mp * 4.0 * ni                 # gamma + norms
+               + 2.0 * qp * 4.0)                     # q norms + output
+    else:
+        raise ValueError(f"unknown family {cell.family!r}")
+    return flops, hbm
+
+
+def classify(flops: float, hbm_bytes: float) -> str:
+    """DMA-bound ("memory") vs compute-bound via the roofline terms
+    (single chip, no collectives)."""
+    t = terms(flops, hbm_bytes, 0.0, 1)
+    return "memory" if t.memory_s >= t.compute_s else "compute"
+
+
+def candidates(cell: Cell, *, precision: str,
+               interpret: bool) -> List[dict]:
+    """The feasible (block_m, block_n, block_k, depth) space for a cell."""
+    if cell.family == "gram":
+        bms = _block_menu(cell.m, BLOCK_CHOICES)
+        bns = _block_menu(cell.n, BLOCK_CHOICES)
+        bks = _block_menu(cell.d, BLOCK_CHOICES)
+        space = [(bm, bn, bk) for bm in bms for bn in bns for bk in bks]
+    elif cell.family == "fupdate":
+        bms = _block_menu(cell.m, FUPDATE_BM_CHOICES)
+        bks = _block_menu(cell.d, BLOCK_CHOICES)
+        space = [(bm, None, bk) for bm in bms for bk in bks]
+    elif cell.family == "decision":
+        bms = _block_menu(cell.n, BLOCK_CHOICES)      # query tiles
+        bns = _block_menu(cell.m, BLOCK_CHOICES)      # support tiles
+        space = [(bm, bn, None) for bm in bms for bn in bns]
+    else:
+        raise ValueError(f"unknown family {cell.family!r}")
+    depths = (2,) if interpret else DEPTHS
+    out = []
+    for bm, bn, bk in space:
+        for depth in depths:
+            if vmem_bytes(cell, block_m=bm, block_n=bn, block_k=bk,
+                          depth=depth, precision=precision) \
+                    > VMEM_BUDGET_BYTES:
+                continue
+            out.append({"block_m": bm, "block_n": bn, "block_k": bk,
+                        "depth": depth})
+    return out
+
+
+def _candidate_name(cell: Cell, cfg: dict) -> str:
+    bits = [f"{cell.family}_m{cell.m}_n{cell.n}_d{cell.d}",
+            f"bm{cfg['block_m']}"]
+    if cfg["block_n"] is not None:
+        bits.append(f"bn{cfg['block_n']}")
+    if cfg["block_k"] is not None:
+        bits.append(f"bk{cfg['block_k']}")
+    bits.append(f"x{cfg['depth']}")
+    return "_".join(bits)
+
+
+def _make_runner(cell: Cell, precision: str,
+                 interpret: bool) -> Callable[[dict], jax.Array]:
+    """Build the timed closure for one cell: data is created once, each
+    candidate launches through the real ops wrapper with explicit block
+    kwargs (never the table)."""
+    kern = rbf(gamma=0.5)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    if cell.family == "gram":
+        x = jax.random.normal(keys[0], (cell.m, cell.d), jnp.float32)
+        y = jax.random.normal(keys[1], (cell.n, cell.d), jnp.float32)
+
+        def run(cfg):
+            return gram(x, y, kern, tm=cfg["block_m"], tn=cfg["block_n"],
+                        tk=cfg["block_k"], interpret=interpret,
+                        precision=precision)
+    elif cell.family == "fupdate":
+        x = jax.random.normal(keys[0], (cell.m, cell.d), jnp.float32)
+        xsel = x[:cell.n]
+        delta = jax.random.normal(keys[1], (cell.n,), jnp.float32) * 0.05
+        f = jax.random.normal(keys[2], (cell.m,), jnp.float32)
+
+        def run(cfg):
+            return fupdate(x, xsel, delta, f, kern, tm=cfg["block_m"],
+                           tk=cfg["block_k"], interpret=interpret,
+                           precision=precision)
+    elif cell.family == "decision":
+        t = jax.random.normal(keys[0], (cell.m, cell.d), jnp.float32)
+        q = jax.random.normal(keys[1], (cell.n, cell.d), jnp.float32)
+        gv = jax.random.normal(keys[2], (cell.m,), jnp.float32) * 0.05
+
+        def run(cfg):
+            return decision(q, t, gv, 0.2, 0.8, kern, tm=cfg["block_m"],
+                            tn=cfg["block_n"], interpret=interpret,
+                            precision=precision)
+    else:
+        raise ValueError(f"unknown family {cell.family!r}")
+    return run
+
+
+def _time_best_of(fn: Callable[[], jax.Array], repeats: int) -> float:
+    """min-of-N wall time after one untimed compile/warmup call — min is
+    far more jitter-stable than mean for the millisecond interpret-mode
+    launches the CI gate diffs."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep(cells: Optional[Iterable[Cell]] = None, *, mode: str = "quick",
+          precisions: Sequence[str] = ("f32",), repeats: int = 3,
+          interpret: Optional[bool] = None,
+          progress: Optional[Callable[[str], None]] = None) -> dict:
+    """Run the autotune sweep; returns the BENCH_autotune.json document.
+
+    ``cells`` defaults to :data:`QUICK_CELLS` / :data:`FULL_CELLS` by
+    ``mode``. One winner row is emitted per (cell, precision): the
+    candidate with the smallest min-of-``repeats`` wall time.
+    """
+    if cells is None:
+        cells = QUICK_CELLS if mode == "quick" else FULL_CELLS
+    if interpret is None:
+        interpret = _auto_interpret()
+    precisions = tuple(check_precision(p) for p in precisions)
+    say = progress or (lambda _msg: None)
+
+    cand_rows: List[dict] = []
+    winner_rows: List[dict] = []
+    for cell in cells:
+        for precision in precisions:
+            run = _make_runner(cell, precision, interpret)
+            best = None
+            for cfg in candidates(cell, precision=precision,
+                                  interpret=interpret):
+                flops, hbm = cost_model(
+                    cell, block_m=cfg["block_m"], block_n=cfg["block_n"],
+                    block_k=cfg["block_k"], precision=precision)
+                t = _time_best_of(lambda cfg=cfg: run(cfg), repeats)
+                row = {
+                    "name": _candidate_name(cell, cfg),
+                    "family": cell.family,
+                    "m": cell.m, "n": cell.n, "d": cell.d,
+                    "precision": precision,
+                    "time_s": t,
+                    "block_m": cfg["block_m"], "block_n": cfg["block_n"],
+                    "block_k": cfg["block_k"], "depth": cfg["depth"],
+                    "bound": classify(flops, hbm),
+                    "flops": flops, "hbm_bytes": hbm,
+                }
+                cand_rows.append(row)
+                say(f"{row['name']},{precision},{t * 1e6:.0f}us,"
+                    f"{row['bound']}-bound")
+                if best is None or t < best["time_s"]:
+                    best = row
+            win = dict(best)
+            win["name"] = (f"{cell.family}_m{cell.m}_n{cell.n}"
+                           f"_d{cell.d}_best")
+            win["best_s"] = win.pop("time_s")
+            winner_rows.append(win)
+            say(f"WINNER {win['name']},{precision},"
+                f"bm{win['block_m']}/bn{win['block_n']}/"
+                f"bk{win['block_k']}/x{win['depth']},"
+                f"{win['best_s'] * 1e6:.0f}us")
+
+    return {
+        "mode": mode,
+        "backend": backend_name(interpret),
+        "interpret": interpret,
+        "candidates": cand_rows,
+        "winners": winner_rows,
+    }
+
+
+# ---------------------------------------------------------------------------
+# committed-table production
+# ---------------------------------------------------------------------------
+
+def winners_to_entries(result: dict) -> List[dict]:
+    """Winner rows -> tuned-table entries keyed for ``resolve_tiles``."""
+    backend = result["backend"]
+    out = []
+    for w in result["winners"]:
+        out.append({
+            "family": w["family"],
+            "m": w["m"],                  # the table-key row count
+            "d": w["d"],
+            "precision": w["precision"],
+            "backend": backend,
+            "block_m": w["block_m"],
+            "block_n": w["block_n"],
+            "block_k": w["block_k"],
+            "depth": w["depth"],
+            "bound": w["bound"],
+            "best_s": w["best_s"],
+        })
+    return out
+
+
+def _entry_key(e: dict) -> tuple:
+    return (e["family"], e["m"], e["d"], e["precision"], e["backend"])
+
+
+def write_table(entries: List[dict], path=TUNED_TABLE_PATH, *,
+                merge: bool = True) -> dict:
+    """Merge ``entries`` into the committed table at ``path``.
+
+    Same-key entries are replaced, everything else is preserved (so a
+    quick sweep refreshes its cells without wiping a full sweep's, and a
+    TPU sweep never clobbers the interpret rows). Entries are sorted by
+    key so re-runs produce stable diffs.
+    """
+    path = Path(path)
+    merged = {}
+    if merge and path.exists():
+        with open(path) as fh:
+            for e in json.load(fh).get("entries", []):
+                merged[_entry_key(e)] = e
+    for e in entries:
+        merged[_entry_key(e)] = e
+    doc = {
+        "version": 1,
+        "generated_by": "benchmarks/autotune_kernels.py --update-table",
+        "entries": [merged[k] for k in sorted(merged)],
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1)
+        fh.write("\n")
+    return doc

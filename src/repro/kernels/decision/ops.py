@@ -5,6 +5,17 @@ kernel (the support set is the serving HBM bill); gamma, the norms, the
 accumulator and the slab epilogue ``(s - rho1) * (rho2 - s)`` stay f32
 (see ``repro.kernels.precision``). On the packed fast path the support
 block is stored in the serving dtype once, at model-pack time.
+
+Tile sizes: the convenience ``decision`` entry point resolves
+``tm``/``tn`` from the autotune table when they are left ``None`` (the
+committed ``kernels/tuned_configs.json``, keyed on (family="decision",
+support rows, D, precision, backend), nearest-shape fallback to the
+fixed constants (256, 512); ``REPRO_NO_AUTOTUNE=1`` or explicit kwargs
+opt out — docs/kernels.md). ``decision_packed`` does NOT consult the
+table: its tile geometry is baked into the packed operands at
+model-pack time (``serve.model_cache.pack_model``) and the scorer
+passes it explicitly — resolving it per launch could disagree with the
+pack and reject the operands.
 """
 from __future__ import annotations
 
@@ -14,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.kernel_fn import KernelFn
-from repro.kernels.tiling import _auto_interpret, _pad_to
+from repro.kernels.tiling import (_auto_interpret, _pad_to, backend_name,
+                                  resolve_tiles)
 from repro.kernels.decision.kernel import decision_pallas
 from repro.kernels.precision import tile_dtype
 
@@ -22,16 +34,36 @@ from repro.kernels.precision import tile_dtype
 @partial(jax.jit, static_argnames=("kernel", "tm", "tn", "interpret",
                                    "precision"))
 def decision(q, t, gamma_vec, rho1, rho2, kernel: KernelFn, *,
-             tm: int = 256, tn: int = 512, interpret: bool | None = None,
-             precision: str = "f32"):
+             tm: int | None = None, tn: int | None = None,
+             interpret: bool | None = None, precision: str = "f32"):
     """Slab decision values for queries q against support set (t, gamma).
 
-    Padding: extra training rows get gamma = 0 (no contribution); extra
-    query rows are sliced away; the feature dim is zero-padded (no effect
-    on dot products or norms).
+    Args:
+      q: (NQ, D) query rows; padded internally to tile multiples (extra
+        query rows are sliced away).
+      t: (M, D) support rows; extra rows get gamma = 0 (no contribution).
+        The feature dim is zero-padded to a lane multiple (no effect on
+        dot products or norms).
+      gamma_vec: (M,) f32 dual coefficients.
+      rho1, rho2: slab offsets (scalars, f32).
+      kernel: ``repro.core.KernelFn``; name/scalars static.
+      tm, tn: query / support block sizes (multiples of 128). ``None``
+        (default) resolves from the autotune table; passing either opts
+        out of the table (rest fall back to 256/512). The feature dim is
+        kept whole (no k-blocking) — OCSSVM feature dims are small.
+      interpret: force Pallas interpret mode; ``None`` auto-detects.
+      precision: tile-input stream dtype ("f32"/"bf16"/"f16").
+
+    Returns:
+      (NQ,) f32 slab decision values ``(s - rho1) * (rho2 - s)``.
     """
     if interpret is None:
         interpret = _auto_interpret()
+    cfg = resolve_tiles("decision", m=t.shape[0], d=t.shape[1],
+                        precision=precision,
+                        backend=backend_name(interpret),
+                        block_m=tm, block_n=tn)
+    tm, tn = cfg.block_m, cfg.block_n
     dt = tile_dtype(precision)
     nq = q.shape[0]
     q = _pad_to(_pad_to(q.astype(jnp.float32), tm, 0), 128, 1).astype(dt)
@@ -67,6 +99,11 @@ def decision_packed(q_pad, t_pad, gamma_pad, t_norms, rho1, rho2,
     no-op then), ``t_norms`` is always f32 and was computed from the
     rounded rows. Returns all ``q_pad.shape[0]`` values; the caller
     slices its live rows.
+
+    ``tm``/``tn`` here are part of the pack geometry (``pack_model``'s
+    ``tn``, the scorer's bucket ``tm``) and are always passed
+    explicitly by the serving stack — the autotune table is not
+    consulted (see the module docstring).
     """
     if interpret is None:
         interpret = _auto_interpret()

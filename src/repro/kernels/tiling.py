@@ -7,13 +7,91 @@ helpers from any entry point without touching the
 ``repro.kernels`` first used to deadlock the partially-initialized
 ``gram.ops`` module when ``fupdate.ops`` pulled the helpers from it
 mid-cycle.
+
+Besides the padding/interpret helpers this module owns **trace-time
+tile-config resolution**: each kernel wrapper (``gram/fupdate/decision
+ops.py``) calls :func:`resolve_tiles` with its family, problem shape,
+precision and backend, and gets back the block sizes to launch with.
+Resolution precedence, highest first:
+
+1. explicit ``tm=/tn=/tk=`` kwargs at the call site — passing ANY block
+   kwarg opts the call out of the tuned table entirely (the remaining
+   fields come from :data:`DEFAULT_CONFIGS`, never from the table, so a
+   hand-steered launch is fully predictable);
+2. ``REPRO_NO_AUTOTUNE=1`` in the environment — the escape hatch that
+   forces :data:`DEFAULT_CONFIGS` everywhere (read at trace time, like
+   ``REPRO_INTERPRET``: flip it before the first kernel call of the
+   process);
+3. the committed tuned table ``tuned_configs.json`` (written by
+   ``benchmarks/autotune_kernels.py --update-table``), keyed on
+   ``(family, m, d, precision, backend)`` with nearest-shape fallback
+   (log-distance over (m, d), capped at :data:`NEAREST_MAX_DIST`);
+4. :data:`DEFAULT_CONFIGS` — the pre-autotuner fixed constants.
+
+Resolution happens at trace time (shapes are static under ``jit``), so
+a table swap after a shape's first trace does NOT retrace it — the
+compiled executable keeps the config it was traced with. Tests that
+install a synthetic table (:func:`set_tuned_table`) therefore use fresh
+shapes to force a retrace. See docs/kernels.md.
 """
 from __future__ import annotations
 
+import json
+import math
 import os
+from dataclasses import dataclass, replace
+from functools import lru_cache
+from pathlib import Path
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+# MXU/VPU lane width: every block dimension must be a multiple of this.
+LANE = 128
+
+# In-flight buffer depths the autotuner may commit (double / quad
+# buffering). Depth is consumed by the autotuner's VMEM-feasibility
+# model and recorded in the table for the roofline rows; the Pallas
+# pipeline itself is compiler-managed (double-buffered by default).
+DEPTHS = (2, 4)
+
+# Nearest-shape fallback cap: |log2(m/m')| + |log2(d/d')| beyond which a
+# table entry is considered too far from the requested shape to trust.
+NEAREST_MAX_DIST = 2.0
+
+# The committed autotune table, produced by
+# ``benchmarks/autotune_kernels.py --quick --update-table``.
+TUNED_TABLE_PATH = Path(__file__).resolve().parent / "tuned_configs.json"
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """Block sizes (and buffer depth) for one kernel launch.
+
+    ``block_n`` / ``block_k`` are ``None`` where the family has no such
+    axis (fupdate has no n-blocking — the selected block is resident;
+    decision keeps the feature dim whole, so no k-blocking). ``source``
+    records how the config was chosen: "default", "explicit",
+    "table-exact" or "table-nearest".
+    """
+
+    block_m: int
+    block_n: Optional[int]
+    block_k: Optional[int]
+    depth: int = 2
+    source: str = "default"
+
+
+# The pre-autotuner fixed constants, still the fallback everywhere the
+# table has nothing to say. (gram: (tm, tn, tk); fupdate: (tm, -, tk);
+# decision: (tm, tn, -).)
+DEFAULT_CONFIGS = {
+    "gram": TileConfig(256, 256, 512),
+    "fupdate": TileConfig(512, None, 512),
+    "decision": TileConfig(256, 512, None),
+}
+FAMILIES = tuple(DEFAULT_CONFIGS)
 
 
 def _pad_to(a, mult, axis):
@@ -38,3 +116,162 @@ def _auto_interpret() -> bool:
     if env in ("0", "false", "off"):
         return False
     return jax.default_backend() != "tpu"
+
+
+def _no_autotune() -> bool:
+    """REPRO_NO_AUTOTUNE=1 disables the tuned table (trace-time read)."""
+    return os.environ.get("REPRO_NO_AUTOTUNE", "").strip().lower() in (
+        "1", "true", "on")
+
+
+def backend_name(interpret: bool) -> str:
+    """The backend key a kernel launch tunes under.
+
+    Interpret-mode launches are their own backend ("interpret"): an
+    emulated sweep says nothing about MXU timings, so a table produced
+    on CPU CI never leaks configs into real TPU launches — those miss
+    the table (backend "tpu") and fall back to the defaults until a
+    sweep is run on hardware.
+    """
+    return "interpret" if interpret else jax.default_backend()
+
+
+# ---------------------------------------------------------------------------
+# tuned-table loading + validation
+# ---------------------------------------------------------------------------
+
+_REQUIRED_ENTRY_KEYS = ("family", "m", "d", "precision", "backend",
+                        "block_m", "depth")
+
+# Test hook: a dict/path installed via set_tuned_table, or None for the
+# committed TUNED_TABLE_PATH.
+_table_override = None
+
+
+def _validate_entry(e: dict) -> dict:
+    if not all(k in e for k in _REQUIRED_ENTRY_KEYS):
+        missing = [k for k in _REQUIRED_ENTRY_KEYS if k not in e]
+        raise ValueError(f"tuned-table entry missing keys {missing}: {e}")
+    fam = e["family"]
+    if fam not in FAMILIES:
+        raise ValueError(f"tuned-table entry has unknown family {fam!r} "
+                         f"(expected one of {FAMILIES})")
+    tmpl = DEFAULT_CONFIGS[fam]
+    for key, applicable in (("block_m", True),
+                            ("block_n", tmpl.block_n is not None),
+                            ("block_k", tmpl.block_k is not None)):
+        v = e.get(key)
+        if not applicable:
+            if v is not None:
+                raise ValueError(
+                    f"tuned-table entry sets {key}={v} but family {fam!r} "
+                    f"has no such axis: {e}")
+            continue
+        if not isinstance(v, int) or v <= 0 or v % LANE:
+            raise ValueError(
+                f"tuned-table entry {key}={v!r} must be a positive "
+                f"multiple of {LANE}: {e}")
+    if e["depth"] not in DEPTHS:
+        raise ValueError(f"tuned-table entry depth={e['depth']!r} not in "
+                         f"{DEPTHS}: {e}")
+    if int(e["m"]) <= 0 or int(e["d"]) <= 0:
+        raise ValueError(f"tuned-table entry needs positive m/d: {e}")
+    return e
+
+
+def _entries_from_doc(doc: dict) -> tuple:
+    if not isinstance(doc, dict) or "entries" not in doc:
+        raise ValueError("tuned table must be a dict with an 'entries' list")
+    return tuple(_validate_entry(dict(e)) for e in doc["entries"])
+
+
+@lru_cache(maxsize=None)
+def _load_table_file(path_str: str) -> tuple:
+    with open(path_str) as fh:
+        return _entries_from_doc(json.load(fh))
+
+
+def set_tuned_table(table) -> None:
+    """Install a tuned table for this process (test hook).
+
+    ``table`` is a dict in the ``tuned_configs.json`` format, a path to
+    one, or ``None`` to restore the committed table. Validation happens
+    eagerly for dicts (a broken synthetic table fails here, not at the
+    first kernel launch). NOTE: already-traced shapes keep the configs
+    they were traced with — use fresh shapes after swapping the table.
+    """
+    global _table_override
+    if isinstance(table, dict):
+        _entries_from_doc(table)   # eager validation
+    _table_override = table
+    _load_table_file.cache_clear()
+
+
+def _table_entries() -> tuple:
+    src = _table_override
+    if src is None:
+        if not TUNED_TABLE_PATH.exists():
+            return ()
+        return _load_table_file(str(TUNED_TABLE_PATH))
+    if isinstance(src, (str, Path)):
+        return _load_table_file(str(src))
+    return _entries_from_doc(src)
+
+
+def lookup_tuned(family: str, m: int, d: int, precision: str,
+                 backend: str) -> Optional[TileConfig]:
+    """Exact (family, m, d, precision, backend) hit, else the nearest
+    same-(family, precision, backend) entry by |log2 m ratio| +
+    |log2 d ratio| within :data:`NEAREST_MAX_DIST`, else ``None``.
+    """
+    best = None
+    best_dist = None
+    for e in _table_entries():
+        if (e["family"] != family or e["precision"] != precision
+                or e["backend"] != backend):
+            continue
+        dist = (abs(math.log2(max(m, 1) / e["m"]))
+                + abs(math.log2(max(d, 1) / e["d"])))
+        if dist > NEAREST_MAX_DIST:
+            continue
+        # prefer smaller distance; on ties, the larger tuned m (closer
+        # to the asymptotic regime)
+        if (best is None or dist < best_dist
+                or (dist == best_dist and e["m"] > best["m"])):
+            best, best_dist = e, dist
+    if best is None:
+        return None
+    return TileConfig(
+        block_m=best["block_m"], block_n=best.get("block_n"),
+        block_k=best.get("block_k"), depth=best["depth"],
+        source="table-exact" if best_dist == 0.0 else "table-nearest")
+
+
+def resolve_tiles(family: str, *, m: int, d: int, precision: str,
+                  backend: str, block_m: Optional[int] = None,
+                  block_n: Optional[int] = None,
+                  block_k: Optional[int] = None) -> TileConfig:
+    """Pick the launch config for one kernel call (trace time).
+
+    ``m``/``d`` are the family's table key: the streamed-majority row
+    count (gram: max(M, N); fupdate: the X rows; decision: the support
+    rows) and the logical feature dim. ``block_*`` are the wrapper's
+    explicit kwargs — any of them being set wins over the table (the
+    unset rest come from :data:`DEFAULT_CONFIGS`). See the module
+    docstring for the full precedence.
+    """
+    if family not in FAMILIES:
+        raise ValueError(f"unknown kernel family {family!r}; "
+                         f"expected one of {FAMILIES}")
+    default = DEFAULT_CONFIGS[family]
+    if block_m is not None or block_n is not None or block_k is not None:
+        return replace(
+            default,
+            block_m=block_m if block_m is not None else default.block_m,
+            block_n=block_n if block_n is not None else default.block_n,
+            block_k=block_k if block_k is not None else default.block_k,
+            source="explicit")
+    if _no_autotune():
+        return default
+    tuned = lookup_tuned(family, m, d, precision, backend)
+    return tuned if tuned is not None else default

@@ -12,6 +12,9 @@ def __getattr__(name):
     if name == "fit":
         from repro.api import fit
         return fit
+    if name == "fit_update":
+        from repro.api import fit_update
+        return fit_update
     if name == "serve":
         # Import the subpackage (a callable module): ``repro.serve(X, s)``
         # and ``repro.serve.ModelCache`` resolve to the same object no
@@ -21,4 +24,4 @@ def __getattr__(name):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-__all__ = ["fit", "serve"]
+__all__ = ["fit", "fit_update", "serve"]

@@ -19,6 +19,7 @@ available for benchmarks and tests that compare compositions.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
@@ -26,6 +27,9 @@ import jax
 from repro.core.batched_smo import solve_blocked
 from repro.core.distributed_smo import solve_blocked_distributed
 from repro.core.engine.gram import SINGLE_PASS_MAX
+from repro.core.engine.state import (SolverArtifact, WarmStart,
+                                     artifact_from_result,
+                                     prepare_warm_start)
 from repro.core.engine.types import SMOResult
 from repro.core.ocssvm import SlabSpec
 from repro.core.shrinking import (solve_blocked_shrinking,
@@ -70,6 +74,8 @@ def fit(
     data_axes: Tuple[str, ...] = ("data",),
     multi_pod: bool = False,
     ledger=None,
+    warm_start=None,
+    warm_info_out: Optional[dict] = None,
     **kwargs,
 ) -> SMOResult:
     """Train a One-Class Slab SVM; returns an ``SMOResult``.
@@ -92,7 +98,14 @@ def fit(
     the sharded ones). ledger: a
     ``repro.core.engine.CollectiveLedger`` the sharded strategies fill
     with per-device collective-bytes accounting (ignored by the local
-    strategies). Extra kwargs flow to the chosen solver
+    strategies). warm_start: a prior fit to seed from — a
+    ``SolverArtifact`` (or an ``SMOResult``, converted; or an
+    already-prepared ``engine.WarmStart``): gamma seeds from the
+    overlapping rows and the f-cache is reconciled with one fused rank-s
+    sweep instead of the O(m^2) init (``docs/streaming.md``; the
+    paper/mvp strategies seed gamma only). warm_info_out: a dict the
+    warm-start accounting (overlap/fresh/expired/correction counts) is
+    written into. Extra kwargs flow to the chosen solver
     (max_iters/max_outer, patience, gamma0, ...).
     """
     if spec is None:
@@ -101,6 +114,17 @@ def fit(
         raise ValueError(f"unknown strategy {strategy!r}; "
                          f"expected one of {STRATEGIES}")
     m = X.shape[0]
+
+    warm = None
+    if warm_start is not None:
+        if isinstance(warm_start, WarmStart):
+            warm = warm_start          # prepared by the caller (fit_update)
+        else:
+            art = _as_artifact(warm_start, precision=precision)
+            warm, winfo = prepare_warm_start(art, X, spec,
+                                             precision=precision)
+            if warm_info_out is not None:
+                warm_info_out.update(dataclasses.asdict(winfo))
 
     if strategy == "auto":
         if mesh is not None:
@@ -140,7 +164,8 @@ def fit(
                                            P_pairs=P, tol=tol,
                                            precision=precision,
                                            interpret=interpret,
-                                           ledger=ledger, **kwargs)
+                                           ledger=ledger, warm=warm,
+                                           **kwargs)
         # Below the shrinking threshold the plain sharded solve runs;
         # surface a clear error for shrinking-only knobs instead of an
         # opaque TypeError (the accepted kwargs must not silently change
@@ -158,7 +183,8 @@ def fit(
                                          data_axes=data_axes, P_pairs=P,
                                          tol=tol, precision=precision,
                                          interpret=interpret,
-                                         ledger=ledger, **kwargs)
+                                         ledger=ledger, warm=warm,
+                                         **kwargs)
 
     if strategy == "pallas":
         if gram_mode is not None and gram_mode != "pallas":
@@ -168,10 +194,14 @@ def fit(
                 f"strategy='blocked'")
         return solve_blocked(X, spec, P=P, gram_mode="pallas",
                              interpret=interpret, precision=precision,
-                             tol=tol, **kwargs)
+                             tol=tol, warm=warm, **kwargs)
 
     gm = gram_mode if gram_mode is not None else _auto_gram_mode(m, interpret)
     if strategy in ("paper", "mvp"):
+        # The sequential facades predate the warm f-cache path: seed
+        # gamma only (the init pass still scores it from scratch).
+        if warm is not None:
+            kwargs["gamma0"] = warm.gamma0
         return solve_smo(X, spec, selection=strategy, gram_mode=gm,
                          interpret=interpret, precision=precision, tol=tol,
                          **kwargs)
@@ -179,9 +209,79 @@ def fit(
         return solve_blocked_shrinking(X, spec, P=P, gram_mode=gm,
                                        interpret=interpret,
                                        precision=precision, tol=tol,
-                                       **kwargs)
+                                       warm=warm, **kwargs)
     return solve_blocked(X, spec, P=P, gram_mode=gm, interpret=interpret,
-                         precision=precision, tol=tol, **kwargs)
+                         precision=precision, tol=tol, warm=warm, **kwargs)
+
+
+def _as_artifact(prev, *, precision: str = "f32") -> SolverArtifact:
+    if isinstance(prev, SolverArtifact):
+        return prev
+    if isinstance(prev, SMOResult):
+        return artifact_from_result(prev, precision=precision)
+    raise TypeError(
+        f"expected a SolverArtifact or SMOResult, got {type(prev).__name__}")
+
+
+def fit_update(
+    prev,
+    X_new: Array,
+    spec: Optional[SlabSpec] = None,
+    *,
+    min_overlap: float = 0.5,
+    stats_out: Optional[dict] = None,
+    **kwargs,
+) -> SMOResult:
+    """Delta-solve: re-fit on ``X_new`` warm-started from a prior fit.
+
+    ``prev`` is a ``SolverArtifact`` (or an ``SMOResult``, converted).
+    Rows are matched by content hash — appended rows enter with zero
+    coefficient, expired rows' contribution is subtracted from the
+    f-cache with the same fused rank-s sweep the hot loop runs — so the
+    solve starts next to the prior optimum: on small deltas it converges
+    in a small fraction of the cold iteration count (the streaming
+    acceptance test asserts <= 25% on a 5% append).
+
+    When the overlap fraction falls below ``min_overlap`` the warm seed
+    is more misdirection than head start (most of the f-cache would be
+    corrections), so the call falls back to a cold ``fit`` — the routing
+    is recorded in ``stats_out`` (``mode``: "warm" | "cold", plus the
+    overlap/fresh/expired/correction counts).
+
+    ``spec`` defaults to the artifact's; kwargs flow to ``fit``
+    (strategy, precision, tol, ...). ``precision`` defaults to the
+    artifact's so the warm correction rows are rounded to the same Gram
+    tiles the prior solve streamed.
+    """
+    precision = kwargs.pop("precision", None)
+    art = _as_artifact(prev, precision=precision or "f32")
+    if precision is None:
+        precision = art.precision
+    if spec is None:
+        spec = art.spec
+    warm, info = prepare_warm_start(art, X_new, spec, precision=precision)
+    mode = "warm" if info.overlap_frac >= min_overlap else "cold"
+    if mode == "warm" and "P" not in kwargs:
+        # A delta-solve's violators concentrate on the delta: the fresh
+        # rows must acquire mass and the corrected rows re-equilibrate,
+        # while the rest of the active set barely moves. Scaling the
+        # working-set size with the delta lets one rank-2P sweep touch
+        # most of the moving set — fewer full HBM passes over X, which
+        # is the blocked solver's per-iteration cost — instead of
+        # drip-feeding 8 pairs at a time through a cold-sized block.
+        # Capped at m/16 so the per-shard top_k of the sharded engine
+        # (local rows ~ m/devices) never asks for more pairs than a
+        # shard holds.
+        moving = info.n_fresh + info.n_corr
+        kwargs["P"] = max(8, min(64, info.m // 16,
+                                 1 << max(moving // 2, 1).bit_length()))
+    if stats_out is not None:
+        stats_out.update(dataclasses.asdict(info))
+        stats_out["mode"] = mode
+        stats_out["P"] = kwargs.get("P")
+    if mode == "cold":
+        return fit(X_new, spec, precision=precision, **kwargs)
+    return fit(X_new, spec, precision=precision, warm_start=warm, **kwargs)
 
 
 def serve(X: Optional[Array] = None, spec: Optional[SlabSpec] = None, *,

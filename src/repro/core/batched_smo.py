@@ -48,11 +48,19 @@ def solve_blocked(
     patience: int = 20,
     gamma0: Optional[Array] = None,
     f_offset: Optional[Array] = None,
+    warm=None,
 ) -> SMOResult:
     """f_offset: constant per-row score contribution from coordinates
     OUTSIDE this problem (the shrinking driver freezes bound coordinates
     and solves the active subset; their kernel contribution to each active
     row's score rides along as this offset).
+
+    warm: optional ``engine.WarmStart`` (from
+    ``engine.prepare_warm_start``) — seeds gamma from the prior fit and
+    reconciles the f-cache with one fused rank-s sweep instead of the
+    O(m^2) init pass. Mutually exclusive with ``gamma0`` (the warm seed
+    IS the initial gamma). A plain jit-traced pytree: re-fitting with a
+    different correction-set size retraces, same size re-runs.
 
     The spec stays a traced pytree except under gram_mode="pallas", where
     the Pallas kernel must specialize on concrete kernel parameters (the
@@ -60,9 +68,12 @@ def solve_blocked(
     force-overrides the Pallas provider's interpret-mode autodetection;
     ``precision`` is the Gram tile-input dtype
     (``repro.kernels.precision``)."""
+    if warm is not None and gamma0 is not None:
+        raise ValueError("pass warm= or gamma0=, not both")
     kw = dict(P=P, gram_mode=gram_mode, interpret=interpret,
               precision=precision, tol=tol, max_outer=max_outer,
-              patience=patience, gamma0=gamma0, f_offset=f_offset)
+              patience=patience, gamma0=gamma0, f_offset=f_offset,
+              warm=warm)
     if gram_mode == "pallas":
         return _solve_static(X, concrete_spec(spec), **kw)
     return _solve_traced(X, spec, **kw)
@@ -81,28 +92,36 @@ def _solve_impl(
     patience: int,
     gamma0: Optional[Array],
     f_offset: Optional[Array],
+    warm,
 ) -> SMOResult:
     m, _ = X.shape
     Xf = X.astype(jnp.float32)
     hi, lo = spec.upper(m), spec.lower(m)
 
-    gamma = (feasible_init(m, spec, jnp.float32) if gamma0 is None
-             else gamma0.astype(jnp.float32))
+    if warm is not None:
+        gamma = warm.gamma0.astype(jnp.float32)
+    else:
+        gamma = (feasible_init(m, spec, jnp.float32) if gamma0 is None
+                 else gamma0.astype(jnp.float32))
 
     provider = engine.make_provider(gram_mode, Xf, spec.kernel,
                                     interpret=interpret, precision=precision)
     selector = engine.BlockSelector(provider, P=P, hi=hi, lo=lo)
     stats_fn = partial(engine.solver_stats_fresh, hi=hi, lo=lo, m=m, tol=tol)
 
-    state0 = engine.init_state(provider, stats_fn, gamma, f_offset=f_offset)
+    state0 = engine.init_state(provider, stats_fn, gamma, f_offset=f_offset,
+                               warm=warm)
     s = engine.run(provider, selector, stats_fn, state0, hi=hi, lo=lo,
                    tol=tol, max_iters=max_outer, patience=patience)
 
     model = OCSSVMModel(gamma=s.gamma, rho1=s.rho1, rho2=s.rho2, X=Xf,
                         spec=spec)
+    # Report f WITHOUT the external offset: K @ gamma over these rows is
+    # what a warm-start artifact wants to checkpoint.
+    f_out = s.f if f_offset is None else s.f - f_offset.astype(s.f.dtype)
     return SMOResult(model=model, iters=s.it, n_viol=s.n_viol,
                      max_viol=s.max_viol, gap=s.gap,
-                     converged=s.gap <= tol)
+                     converged=s.gap <= tol, f=f_out)
 
 
 _SOLVE_STATIC = ("P", "gram_mode", "interpret", "precision", "tol",

@@ -130,6 +130,7 @@ def solve_blocked_distributed(
     precision: str = "f32",
     interpret: Optional[bool] = None,
     gamma0: Optional[Array] = None,
+    warm=None,
     ledger: Optional[engine.CollectiveLedger] = None,
 ) -> SMOResult:
     """Solve the OCSSVM dual with X row-sharded over ``data_axes``.
@@ -146,12 +147,19 @@ def solve_blocked_distributed(
     precision. interpret: force the per-shard Pallas fupdate kernel into
     interpret mode (None auto-detects: interpret on CPU, compiled on
     TPU). gamma0 warm-starts the solve (the sharded shrinking driver
-    re-enters here between repack rounds). ledger: a
+    re-enters here between repack rounds). warm: an
+    ``engine.WarmStart`` — gamma0/f_seed enter row-sharded like every
+    data vector, the (small) correction set rides REPLICATED, and each
+    shard reconciles its own f slice with one local fused fupdate
+    sweep: the warm init costs ZERO collectives (the cold init
+    all-gathers X and gamma). Mutually exclusive with gamma0. ledger: a
     ``CollectiveLedger`` populated at trace time with every collective's
     per-device payload, split into "init" (once) and "iter"
     (per-iteration) phases.
     """
     del fused_stats
+    if warm is not None and gamma0 is not None:
+        raise ValueError("pass warm= or gamma0=, not both")
     # The per-shard Pallas fupdate kernel specializes on concrete kernel
     # parameters (same rule as the local pallas provider).
     spec = concrete_spec(spec)
@@ -161,9 +169,16 @@ def solve_blocked_distributed(
 
     Xf = jnp.pad(X.astype(jnp.float32), ((0, m_pad - m), (0, 0)))
     valid = jnp.arange(m_pad) < m
-    g0 = (feasible_init(m, spec, jnp.float32) if gamma0 is None
-          else gamma0.astype(jnp.float32))
-    g0 = jnp.pad(g0, (0, m_pad - m))
+    if warm is not None:
+        g0 = jnp.pad(warm.gamma0.astype(jnp.float32), (0, m_pad - m))
+        # f_seed shards exactly like gamma; the pad rows' seed value is
+        # irrelevant (valid masks them everywhere, same as cold init).
+        f_seed = jnp.pad(warm.f_seed.astype(jnp.float32), (0, m_pad - m))
+        x_corr, d_corr = warm.x_corr, warm.delta
+    else:
+        g0 = (feasible_init(m, spec, jnp.float32) if gamma0 is None
+              else gamma0.astype(jnp.float32))
+        g0 = jnp.pad(g0, (0, m_pad - m))
 
     hi, lo = spec.upper(m), spec.lower(m)
     data_spec = P(data_axes)
@@ -172,7 +187,7 @@ def solve_blocked_distributed(
     def build():
         comm = engine.MeshComm(data_axes, sizes=sizes, ledger=ledger)
 
-        def local_solve(X_l, gamma_l, valid_l):
+        def local_solve(X_l, gamma_l, valid_l, *warm_ops):
             # Tile-round once, before provider AND selector: both then
             # see identical rows (ShardedGram's precision invariant) and
             # no per-iteration re-round is needed anywhere.
@@ -192,8 +207,15 @@ def solve_blocked_distributed(
             stats_fn = partial(engine.solver_stats_prev, hi=hi, lo=lo,
                                m=m, tol=tol, comm=comm, valid=valid_l)
 
+            w_l = None
+            if warm_ops:
+                # Local f_seed slice + replicated correction set: the
+                # reconcile sweep is purely shard-local.
+                f_l, x_c, d_c = warm_ops
+                w_l = engine.WarmStart(gamma0=gamma_l, f_seed=f_l,
+                                       x_corr=x_c, delta=d_c)
             state0 = engine.init_state(provider, stats_fn, gamma_l,
-                                       ledger=ledger)
+                                       ledger=ledger, warm=w_l)
             s = engine.run(provider, selector, stats_fn, state0, hi=hi,
                            lo=lo, tol=tol, max_iters=max_outer,
                            patience=patience, rho_every=rho_every,
@@ -201,25 +223,37 @@ def solve_blocked_distributed(
             return (s.gamma, s.f, s.rho1, s.rho2, s.it, s.n_viol,
                     s.max_viol, s.gap)
 
+        in_specs = (row_spec, data_spec, data_spec)
+        if warm is not None:
+            in_specs = in_specs + (data_spec, P(None, None), P(None))
         return jax.jit(shard_map(
             local_solve, mesh=mesh,
-            in_specs=(row_spec, data_spec, data_spec),
+            in_specs=in_specs,
             out_specs=(data_spec, data_spec, P(), P(), P(), P(), P(), P()),
             check_vma=False,
         ))
 
+    warm_key = None if warm is None else tuple(warm.x_corr.shape)
     shard_fn = _cached_shard_fn(
         ("solve", mesh, data_axes, m, d, spec, P_pairs, tol, max_outer,
-         patience, rho_every, precision, interpret,
+         patience, rho_every, precision, interpret, warm_key,
          None if ledger is None else id(ledger)), build)
     Xf, = _place(mesh, row_spec, Xf)
     g0, valid = _place(mesh, data_spec, g0, valid)
-    gamma, f, rho1, rho2, it, n_viol, max_viol, gap = shard_fn(
-        Xf, g0, valid)
+    if warm is not None:
+        f_seed, = _place(mesh, data_spec, f_seed)
+        x_corr, = _place(mesh, P(None, None), x_corr)
+        d_corr, = _place(mesh, P(None), d_corr)
+        gamma, f, rho1, rho2, it, n_viol, max_viol, gap = shard_fn(
+            Xf, g0, valid, f_seed, x_corr, d_corr)
+    else:
+        gamma, f, rho1, rho2, it, n_viol, max_viol, gap = shard_fn(
+            Xf, g0, valid)
     model = OCSSVMModel(gamma=gamma[:m], rho1=rho1, rho2=rho2, X=Xf[:m],
                         spec=spec)
     return SMOResult(model=model, iters=it, n_viol=n_viol,
-                     max_viol=max_viol, gap=gap, converged=gap <= tol)
+                     max_viol=max_viol, gap=gap, converged=gap <= tol,
+                     f=f[:m])
 
 
 def sharded_raw_scores(

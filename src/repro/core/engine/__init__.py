@@ -58,6 +58,10 @@ from repro.core.engine.stats import (LOCAL_COMM, CollectiveLedger,
                                      recover_rhos, slab_margin,
                                      solver_stats_fresh, solver_stats_prev,
                                      violation)
+from repro.core.engine.state import (SolverArtifact, WarmStart,
+                                     WarmStartInfo, artifact_from_result,
+                                     match_rows, prepare_warm_start,
+                                     row_hashes)
 from repro.core.engine.types import Selection, SMOResult, SolverState
 
 __all__ = [
@@ -70,4 +74,6 @@ __all__ = [
     "CollectiveRecord", "recover_rhos", "slab_margin",
     "violation", "solver_stats_fresh", "solver_stats_prev",
     "Selection", "SMOResult", "SolverState",
+    "SolverArtifact", "WarmStart", "WarmStartInfo", "artifact_from_result",
+    "match_rows", "prepare_warm_start", "row_hashes",
 ]

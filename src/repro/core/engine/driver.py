@@ -68,18 +68,29 @@ def gauss_seidel_pairs(sel: Selection, Kblk: Array, dsl: Array, *,
 
 def init_state(provider, stats_fn: StatsFn, gamma0: Array,
                f_offset: Optional[Array] = None,
-               ledger=None) -> SolverState:
+               ledger=None, warm=None) -> SolverState:
     """Score the initial gamma and measure the starting diagnostics.
 
     f_offset: constant per-row score contribution from coordinates OUTSIDE
     this problem (the shrinking driver freezes bound coordinates and solves
     the active subset; their kernel contribution rides along here).
+    warm: optional ``engine.state.WarmStart`` — instead of the O(m^2)
+    K @ gamma0 pass, the f-cache is RECONCILED from the prior fit's
+    f_seed with one fused rank-s sweep over the correction set
+    (``provider.reconcile_scores``, the Pallas ``fupdate`` kernel under
+    the pallas/sharded providers). The caller passes
+    ``gamma0 == warm.gamma0`` (its local slice when sharded) — the
+    invariant ``reconcile_scores(warm) == K @ gamma0`` is what
+    ``state.prepare_warm_start`` constructs.
     ledger: optional ``CollectiveLedger`` — everything traced here is
     one-time work, so it is tagged phase="init".
     """
     if ledger is not None:
         ledger.set_phase("init")
-    f = provider.init_scores(gamma0)
+    if warm is not None:
+        f = provider.reconcile_scores(warm)
+    else:
+        f = provider.init_scores(gamma0)
     if f_offset is not None:
         f = f + f_offset.astype(f.dtype)
     zero = jnp.zeros((), f.dtype)

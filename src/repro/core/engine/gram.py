@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.kernel_fn import KernelFn
 from repro.core.engine.types import Selection
@@ -72,17 +73,105 @@ def raw_scores_blocked(X: Array, gamma: Array, kernel: KernelFn,
     return out[:m]
 
 
-class PrecomputedGram:
+class _ScoreDeltas:
+    """Shared O(s * m) score-delta algebra — the warm-start substrate.
+
+    Every provider mixes this in: ``delta_scores`` folds a rank-s kernel
+    contribution into an f-cache with ONE pass over the owned rows (the
+    fused Pallas sweep under the pallas/sharded providers), and
+    ``append_rows``/``expire_rows`` compose it with a cache rebuild so a
+    data delta costs O(dm * m) instead of the O(m^2) cold init.
+    ``reconcile_scores`` is the driver-facing entry: it turns a
+    ``engine.state.WarmStart``'s assumed-configuration f_seed into the
+    new problem's exact K @ gamma0.
+    """
+
+    def delta_scores(self, f: Array, X_delta: Array,
+                     g_delta: Array) -> Array:
+        """f + k(X_own, X_delta) @ g_delta — one pass, no m^2 anything."""
+        if X_delta.shape[0] == 0:
+            return f
+        return f + self.kernel.rows(self.X, X_delta) @ g_delta
+
+    def reconcile_scores(self, warm) -> Array:
+        """Fold a WarmStart's correction set into its seeded f-cache.
+
+        ``prepare_warm_start`` guarantees the result equals K @ gamma0
+        over the owned rows (the local slice when sharded — zero
+        collectives: corrections ride replicated, f_seed rides sharded).
+        """
+        return self.delta_scores(warm.f_seed, warm.x_corr, warm.delta)
+
+    def append_rows(self, X_app, gamma: Array, f: Array, g_app=None):
+        """(provider', gamma', f') for the extended problem [X; X_app].
+
+        Appended rows default to gamma = 0 (fresh data), so surviving
+        scores are untouched; their own scores cost one O(dm * m) pass.
+        A nonzero ``g_app`` first folds the same-rank delta into the
+        surviving f. Host-side API (between solves, concrete shapes).
+        """
+        Xa = round_to_tile(
+            jnp.asarray(X_app, jnp.float32).reshape(-1, self.X.shape[1]),
+            self.precision)
+        if g_app is None:
+            g_app = jnp.zeros((Xa.shape[0],), jnp.float32)
+            f_old = f
+        else:
+            g_app = jnp.asarray(g_app, jnp.float32)
+            f_old = self.delta_scores(f, Xa, g_app)
+        p2 = self._rebuilt_extended(Xa)
+        gamma2 = jnp.concatenate([jnp.asarray(gamma, jnp.float32), g_app])
+        # The appended rows' own scores against the full extended set.
+        f_app = self.kernel.rows(p2.X, Xa).T @ gamma2
+        return p2, gamma2, jnp.concatenate([f_old, f_app])
+
+    def expire_rows(self, idx, gamma: Array, f: Array):
+        """(provider', gamma', f') with rows ``idx`` removed — O(e * m).
+
+        Surviving scores lose the expired rows' kernel columns times
+        their gamma (one rank-e sweep); no O(m^2) recompute. Host-side
+        API (between solves, concrete indices).
+        """
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        keep = np.setdiff1d(np.arange(self.X.shape[0]), idx)
+        Xe = self.X[jnp.asarray(idx)].reshape(-1, self.X.shape[1])
+        ge = jnp.asarray(gamma)[jnp.asarray(idx)].reshape(-1)
+        f2 = self.delta_scores(f, Xe, -ge)[jnp.asarray(keep)]
+        return (self._rebuilt_shrunk(keep), jnp.asarray(gamma)[keep], f2)
+
+    def _rebuilt_extended(self, Xa: Array):
+        raise NotImplementedError
+
+    def _rebuilt_shrunk(self, keep: np.ndarray):
+        raise NotImplementedError
+
+
+class PrecomputedGram(_ScoreDeltas):
     """Materialized m x m Gram matrix: every query is a gather/matmul."""
 
     name = "precomputed"
 
-    def __init__(self, X: Array, kernel: KernelFn, precision: str = "f32"):
+    def __init__(self, X: Array, kernel: KernelFn, precision: str = "f32",
+                 *, _K: Array | None = None):
         self.precision = check_precision(precision)
         self.X = round_to_tile(X, precision)
         self.kernel = kernel
-        self.K = kernel.gram(self.X)
+        self.K = kernel.gram(self.X) if _K is None else _K
         self._diag = kernel.diag(self.X)
+
+    def _rebuilt_extended(self, Xa: Array) -> "PrecomputedGram":
+        # Extend K with the new cross block — O(dm * m) kernel evals,
+        # not a fresh O(m^2) gram.
+        C = self.kernel.rows(self.X, Xa)              # (m, dm)
+        Kaa = self.kernel.cross(Xa, Xa)
+        K2 = jnp.block([[self.K, C], [C.T, Kaa]])
+        return PrecomputedGram(jnp.concatenate([self.X, Xa], axis=0),
+                               self.kernel, self.precision, _K=K2)
+
+    def _rebuilt_shrunk(self, keep: np.ndarray) -> "PrecomputedGram":
+        kj = jnp.asarray(keep)
+        return PrecomputedGram(self.X[kj], self.kernel, self.precision,
+                               _K=self.K[kj][:, kj])
 
     def diag(self) -> Array:
         return self._diag
@@ -116,7 +205,7 @@ class PrecomputedGram:
         return gamma.at[sel.ids].add(delta)
 
 
-class OnTheFlyGram:
+class OnTheFlyGram(_ScoreDeltas):
     """Recompute the <= 2P needed kernel rows from X each iteration."""
 
     name = "on_the_fly"
@@ -126,6 +215,17 @@ class OnTheFlyGram:
         self.X = round_to_tile(X, precision)
         self.kernel = kernel
         self._diag = kernel.diag(self.X)
+
+    def _rebuilt_extended(self, Xa: Array) -> "OnTheFlyGram":
+        return type(self)._clone(self, jnp.concatenate([self.X, Xa],
+                                                       axis=0))
+
+    def _rebuilt_shrunk(self, keep: np.ndarray) -> "OnTheFlyGram":
+        return type(self)._clone(self, self.X[jnp.asarray(keep)])
+
+    @classmethod
+    def _clone(cls, proto: "OnTheFlyGram", X2: Array) -> "OnTheFlyGram":
+        return cls(X2, proto.kernel, precision=proto.precision)
 
     def diag(self) -> Array:
         return self._diag
@@ -186,8 +286,26 @@ class PallasGram(OnTheFlyGram):
         return fupdate(self.X, sel.X, delta, f, self.kernel,
                        interpret=self.interpret, precision=self.precision)
 
+    def delta_scores(self, f: Array, X_delta: Array,
+                     g_delta: Array) -> Array:
+        # The warm-start reconcile sweep IS the hot-loop rank-2P update
+        # with the correction set as the selected block — same fused
+        # kernel, one HBM pass over X. Above BLOCK the selected block
+        # would not sit in VMEM; fall back to the jnp pass.
+        if X_delta.shape[0] == 0:
+            return f
+        if X_delta.shape[0] > BLOCK:
+            return super().delta_scores(f, X_delta, g_delta)
+        return fupdate(self.X, X_delta, g_delta, f, self.kernel,
+                       interpret=self.interpret, precision=self.precision)
 
-class ShardedGram:
+    @classmethod
+    def _clone(cls, proto: "PallasGram", X2: Array) -> "PallasGram":
+        return cls(X2, proto.kernel, interpret=proto.interpret,
+                   precision=proto.precision)
+
+
+class ShardedGram(_ScoreDeltas):
     """Device-local rows under shard_map; f/gamma are local slices.
 
     ``gids`` are this shard's global row ids; selections carry gathered
@@ -271,6 +389,36 @@ class ShardedGram:
         in_range = (loc >= 0) & (loc < self.m_local)
         loc_c = jnp.clip(loc, 0, self.m_local - 1)
         return gamma.at[loc_c].add(jnp.where(in_range, delta, 0.0))
+
+    def delta_scores(self, f: Array, X_delta: Array,
+                     g_delta: Array) -> Array:
+        # Rank-s delta of the LOCAL f slice against REPLICATED delta rows
+        # — zero collectives, same fused Pallas pass as apply_update.
+        # This is how the sharded warm start reconciles: f_seed rides
+        # sharded like gamma, the correction set rides replicated, and
+        # every shard folds its own slice independently.
+        if X_delta.shape[0] == 0:
+            return f
+        if X_delta.shape[0] > BLOCK:
+            return f + self.kernel.rows(self.X, X_delta) @ g_delta
+        return fupdate(self.X, X_delta, g_delta, f, self.kernel,
+                       interpret=self.interpret, precision=self.precision)
+
+    def append_rows(self, X_app, gamma: Array, f: Array, g_app=None):
+        """Sharded append is a facade-level operation (row placement,
+        gids and m_pad all change shape across every shard), so the
+        provider's share is the score algebra only: ``delta_scores`` /
+        ``reconcile_scores`` on the local slice. The distributed facade
+        re-shards rows and rebuilds providers — see
+        ``solve_blocked_distributed(..., warm=)``."""
+        raise NotImplementedError(
+            "sharded append is handled by the distributed facade "
+            "(re-shard + warm=); use delta_scores for the local f algebra")
+
+    def expire_rows(self, idx, gamma: Array, f: Array):
+        raise NotImplementedError(
+            "sharded expiry is handled by the distributed facade "
+            "(re-shard + warm=); use delta_scores for the local f algebra")
 
 
 def make_provider(gram_mode: str, X: Array, kernel: KernelFn,

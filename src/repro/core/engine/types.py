@@ -57,3 +57,7 @@ class SMOResult(NamedTuple):
     max_viol: Array
     gap: Array
     converged: Array
+    # Final f-cache K @ gamma over the full training set. Facades populate
+    # it so ``engine.state.artifact_from_result`` can package a warm-start
+    # artifact without an O(m^2) score recompute; None from legacy paths.
+    f: Optional[Array] = None

@@ -86,10 +86,15 @@ def solve_blocked_shrinking(
     max_outer: Optional[int] = None,
     patience: int = 20,
     gamma0: Optional[Array] = None,
+    warm=None,
 ) -> SMOResult:
     """max_outer caps the per-round iteration budget (alias of
     round_iters, so the blocked solvers' signature works here too);
-    gamma0 warm-starts the phase-1 full-set solve."""
+    gamma0 warm-starts the phase-1 full-set solve. ``warm`` (an
+    ``engine.WarmStart``) goes one further: the phase-1 solve seeds
+    gamma AND reconciles its f-cache from the prior fit's scores with
+    one fused rank-s sweep (``solve_blocked(warm=)``); later rounds
+    proceed from wherever phase 1 lands, exactly as with gamma0."""
     if max_outer is not None:
         round_iters = min(round_iters, max_outer)
     m, d = X.shape
@@ -110,7 +115,7 @@ def solve_blocked_shrinking(
                              tol=tol, patience=patience, **kw)
 
     # Phase 1: bounded full-set warm solve.
-    res = _solve(Xf, spec, max_outer=warm_iters, gamma0=gamma0)
+    res = _solve(Xf, spec, max_outer=warm_iters, gamma0=gamma0, warm=warm)
     gamma = res.model.gamma
     if bool(res.converged):
         return res
@@ -177,7 +182,7 @@ def solve_blocked_shrinking(
     return SMOResult(model=model, iters=jnp.asarray(total_iters),
                      n_viol=jnp.sum(v > tol).astype(jnp.int32),
                      max_viol=jnp.max(v), gap=gap,
-                     converged=jnp.sum(v > tol) <= 1)
+                     converged=jnp.sum(v > tol) <= 1, f=f)
 
 
 def _sharded_freeze_mask(gamma: Array, f: Array, v: Array, mesh: Mesh,
@@ -256,6 +261,7 @@ def solve_sharded_shrinking(
     max_outer: Optional[int] = None,
     patience: int = 20,
     gamma0: Optional[Array] = None,
+    warm=None,
     gather_max: Optional[int] = None,
     rho_every: int = 1,
     ledger: Optional[CollectiveLedger] = None,
@@ -296,19 +302,19 @@ def solve_sharded_shrinking(
     hi, lo = spec.upper(m), spec.lower(m)
     bnd = 1e-8 * (hi - lo)
 
-    def _dist(g0, iters):
+    def _dist(g0, iters, w=None):
         return solve_blocked_distributed(
             X32, spec, mesh, data_axes=data_axes, P_pairs=P_pairs, tol=tol,
             max_outer=iters, patience=patience, precision=precision,
             interpret=interpret, gamma0=g0, rho_every=rho_every,
-            ledger=ledger)
+            ledger=ledger, warm=w)
 
     def _scores(g):
         return sharded_raw_scores(Xf, g, kernel, mesh, data_axes=data_axes,
                                   precision=precision, ledger=ledger)
 
     # Phase 1: bounded full-set distributed warm solve.
-    res = _dist(gamma0, warm_iters)
+    res = _dist(gamma0, warm_iters, warm)
     gamma = res.model.gamma
     if bool(res.converged):
         return res
@@ -377,4 +383,4 @@ def solve_sharded_shrinking(
     return SMOResult(model=model, iters=jnp.asarray(total_iters),
                      n_viol=jnp.sum(v > tol).astype(jnp.int32),
                      max_viol=jnp.max(v), gap=gap,
-                     converged=jnp.sum(v > tol) <= 1)
+                     converged=jnp.sum(v > tol) <= 1, f=f)

@@ -107,7 +107,8 @@ def _solve_impl(
     return SMOResult(model=model, iters=s.it, n_viol=s.n_viol,
                      max_viol=s.max_viol, gap=s.gap,
                      converged=engine.has_converged(s, selector.criterion,
-                                                    tol))
+                                                    tol),
+                     f=s.f)
 
 
 _SOLVE_STATIC = ("gram_mode", "selection", "interpret", "precision", "tol",

@@ -11,7 +11,8 @@ Five layers, each usable on its own:
 * ``service``     — ``ScoringService``: micro-batching request loop with
   per-bucket latency/throughput counters on an injectable clock.
 * ``registry``    — ``ModelRegistry``: name -> recipe -> warm model
-  routing over the cache, with per-model admission quotas.
+  routing over the cache, with per-model admission quotas and
+  drift-gated streaming ``refresh`` (``drift`` holds the KS detector).
 * ``admission``   — ``AdmissionController``: deadline-aware coalescing
   windows in front of ``ScoringService.flush``, typed quota rejection.
 
@@ -30,11 +31,13 @@ import types as _types
 # kernel packages) in the one order that does not trip the
 # core <-> kernels import cycle — scorer/admission start from
 # repro.kernels directly, which only works once core is fully loaded.
-from repro.serve.model_cache import (ModelCache, ServingModel, default_cache,
+from repro.serve.model_cache import (ExtendableFingerprint, ModelCache,
+                                     ServingModel, default_cache,
                                      fingerprint_array, pack_model,
                                      recipe_key, spec_key)
 from repro.serve.admission import (AdmissionController, AdmissionHandle,
                                    QuotaExceededError)
+from repro.serve.drift import DriftReport, ks_statistic, score_drift
 from repro.serve.registry import (DuplicateModelError, ModelRecipe,
                                   ModelRegistry, RegistryError,
                                   UnknownModelError, default_registry, serve)
@@ -43,8 +46,9 @@ from repro.serve.service import (BucketStats, Pending, ScoringService,
                                  run_request_stream)
 
 __all__ = [
-    "ModelCache", "ServingModel", "default_cache", "fingerprint_array",
-    "pack_model", "recipe_key", "serve", "spec_key",
+    "ExtendableFingerprint", "ModelCache", "ServingModel", "default_cache",
+    "fingerprint_array", "pack_model", "recipe_key", "serve", "spec_key",
+    "DriftReport", "ks_statistic", "score_drift",
     "BUCKETS", "BatchScorer", "bucket_for",
     "BucketStats", "Pending", "ScoringService", "run_request_stream",
     "DuplicateModelError", "ModelRecipe", "ModelRegistry", "RegistryError",

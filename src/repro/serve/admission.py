@@ -189,7 +189,11 @@ class AdmissionController:
         """The model's scoring service (built on first use — this is
         where an unfitted registered recipe pays its one fit, under the
         MODEL's lock only). Rebuilt when the registry's lifecycle
-        version for the name moves (evict/refresh/replace)."""
+        version for the name moves (evict/refresh/replace) — but the
+        old service's observed per-bucket latencies carry over: a
+        refresh swaps the model weights, not the launch cost of a
+        bucket, and resetting the estimates to ``fallback_latency_s``
+        would blind the deadline policy right after every refresh."""
         with self._model_lock(model):
             ver = self._registry_version(model)
             with self._lock:
@@ -197,9 +201,13 @@ class AdmissionController:
                 if svc is not None \
                         and self._service_versions.get(model) == ver:
                     return svc
+            old = svc
             sm = self.registry.get(model)    # may fit: no state lock held
             svc = ScoringService(sm.scorer(), max_batch=self.max_batch,
                                  clock=self.clock)
+            if old is not None:
+                with old._stats_lock:
+                    svc.stats = dict(old.stats)
             self._warn_unbindable_quota(model)
             with self._lock:
                 self._services[model] = svc

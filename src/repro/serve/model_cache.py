@@ -76,6 +76,12 @@ class ServingModel:
     spec: SlabSpec      # concretized (hashable) spec
     precision: str = "f32"
     fit_iters: int = 0
+    # The full solver state (`engine.SolverArtifact`) behind this packed
+    # model — gamma/f over ALL training rows, not just SVs. It is what
+    # makes a served model restartable: `ModelRegistry.refresh` hands it
+    # to `repro.fit_update` so a data delta warm-starts instead of
+    # cold-fitting. None when the fit path could not supply one.
+    artifact: Optional[object] = dataclasses.field(default=None, repr=False)
     _scorer: Optional[object] = dataclasses.field(default=None, repr=False)
 
     @property
@@ -167,6 +173,61 @@ def fingerprint_array(X) -> Tuple:
     return (a.shape, str(a.dtype), digest)
 
 
+class ExtendableFingerprint:
+    """Incremental ``fingerprint_array``: O(Δ rows) keying for appends.
+
+    A registry refresh that appends Δm rows would otherwise re-hash the
+    whole training set to compute the new recipe key. sha1 is a
+    streaming hash, so as long as the WHOLE array is what gets hashed
+    (nbytes within ``_HASH_SAMPLE_BYTES`` — above it ``fingerprint_array``
+    switches to a strided row sample and the prefix property breaks),
+    hashing the appended rows into a copy of the saved sha1 state yields
+    exactly ``fingerprint_array(concat([X, X_app]))`` without touching
+    the prefix bytes again.
+
+    ``extend`` returns the extended fingerprint, or None when the
+    incremental path is unavailable (sampled regime, dtype/width
+    mismatch) — callers fall back to ``fingerprint_array`` on the full
+    array, which they hold anyway.
+    """
+
+    __slots__ = ("shape", "dtype", "nbytes", "_h", "_key")
+
+    def __init__(self, X):
+        a = np.asarray(X)
+        self.shape = a.shape
+        self.dtype = str(a.dtype)
+        self.nbytes = a.nbytes
+        self._h = (hashlib.sha1(a.tobytes())
+                   if a.ndim >= 1 and a.nbytes <= _HASH_SAMPLE_BYTES
+                   else None)
+        # hexdigest() does not finalize: _h stays extendable.
+        self._key = ((self.shape, self.dtype, self._h.hexdigest())
+                     if self._h is not None else fingerprint_array(a))
+
+    @property
+    def key(self) -> Tuple:
+        """== ``fingerprint_array`` of the array this fingerprint covers."""
+        return self._key
+
+    def extend(self, X_app) -> Optional["ExtendableFingerprint"]:
+        """Fingerprint of ``concat([X, X_app], axis=0)``, hashing only
+        ``X_app`` — or None when only a full re-hash can be exact."""
+        a = np.asarray(X_app)
+        if (self._h is None or str(a.dtype) != self.dtype
+                or a.shape[1:] != self.shape[1:]
+                or self.nbytes + a.nbytes > _HASH_SAMPLE_BYTES):
+            return None
+        out = object.__new__(ExtendableFingerprint)
+        out.shape = (self.shape[0] + a.shape[0],) + self.shape[1:]
+        out.dtype = self.dtype
+        out.nbytes = self.nbytes + a.nbytes
+        out._h = self._h.copy()
+        out._h.update(a.tobytes())
+        out._key = (out.shape, out.dtype, out._h.hexdigest())
+        return out
+
+
 def spec_key(spec: SlabSpec) -> Tuple:
     spec = concrete_spec(spec)
     k = spec.kernel
@@ -186,6 +247,7 @@ def _kwarg_key(v) -> Tuple:
 def recipe_key(X, spec: Optional[SlabSpec] = None, *,
                offsets: str = "paper", sv_threshold: float = 1e-7,
                tn: int = 512, precision: str = "f32",
+               _fingerprint: Optional[Tuple] = None,
                **fit_kwargs) -> Tuple:
     """The full cache key for one serve recipe.
 
@@ -196,6 +258,11 @@ def recipe_key(X, spec: Optional[SlabSpec] = None, *,
     tuple as recipe identity — so "same recipe" means "same cache entry"
     by construction, and ``ModelCache.evict`` can drop exactly the entry
     a registry name resolves to.
+
+    ``_fingerprint`` substitutes a precomputed data fingerprint (e.g.
+    an ``ExtendableFingerprint.key`` extended by O(Δm) appended rows)
+    for the O(bytes) ``fingerprint_array(X)`` — it MUST equal what
+    ``fingerprint_array`` would return or cache identity breaks.
     """
     if spec is None:
         spec = SlabSpec()
@@ -203,7 +270,8 @@ def recipe_key(X, spec: Optional[SlabSpec] = None, *,
         raise ValueError(f"unknown offsets {offsets!r}; "
                          "expected 'paper' or 'quantile'")
     check_precision(precision)
-    return (spec_key(spec), fingerprint_array(X), offsets, sv_threshold,
+    fp = fingerprint_array(X) if _fingerprint is None else _fingerprint
+    return (spec_key(spec), fp, offsets, sv_threshold,
             tn, precision,
             tuple(sorted((k, _kwarg_key(v)) for k, v in
                          fit_kwargs.items())))
@@ -291,6 +359,8 @@ class ModelCache:
     def get_or_fit(self, X, spec: Optional[SlabSpec] = None, *,
                    offsets: str = "paper", sv_threshold: float = 1e-7,
                    tn: int = 512, precision: str = "f32",
+                   warm_start=None, warm_stats_out: Optional[dict] = None,
+                   _key: Optional[Tuple] = None,
                    **fit_kwargs) -> ServingModel:
         """Return a warm ``ServingModel``, fitting on miss.
 
@@ -301,12 +371,23 @@ class ModelCache:
         tiles) AND used to pack the support block for serving; part of
         the cache key. Extra kwargs flow to ``repro.fit`` and take part
         in the cache key.
+
+        ``warm_start`` (a ``SolverArtifact`` from an earlier fit — e.g.
+        ``served.artifact``) routes a miss through ``repro.fit_update``:
+        the solve is seeded from the prior state over overlapping rows
+        instead of starting cold. It is deliberately NOT part of the
+        cache key — the seed changes how fast the optimum is reached,
+        not (within tolerance) which model comes out, so the same
+        (data, spec) must resolve to the same entry however it was
+        reached. ``warm_stats_out`` receives ``fit_update``'s overlap /
+        mode stats when the warm path actually fits. ``_key`` substitutes
+        a precomputed ``recipe_key`` (registry delta-refresh keying).
         """
         if spec is None:
             spec = SlabSpec()
-        key = recipe_key(X, spec, offsets=offsets,
-                         sv_threshold=sv_threshold, tn=tn,
-                         precision=precision, **fit_kwargs)
+        key = _key if _key is not None else recipe_key(
+            X, spec, offsets=offsets, sv_threshold=sv_threshold, tn=tn,
+            precision=precision, **fit_kwargs)
 
         while True:
             with self._lock:
@@ -328,14 +409,20 @@ class ModelCache:
             # the fitter failed: loop and race to become the next fitter
 
         try:
-            from repro.api import fit
-            res = fit(X, spec, precision=precision, **fit_kwargs)
+            from repro.api import fit, fit_update
+            from repro.core.engine import artifact_from_result
+            if warm_start is not None:
+                res = fit_update(warm_start, X, spec, precision=precision,
+                                 stats_out=warm_stats_out, **fit_kwargs)
+            else:
+                res = fit(X, spec, precision=precision, **fit_kwargs)
             model = res.model
             if offsets == "quantile":
                 model = with_quantile_offsets(model)
             served = pack_model(model, sv_threshold=sv_threshold, tn=tn,
                                 precision=precision)
             served.fit_iters = int(res.iters)
+            served.artifact = artifact_from_result(res, precision=precision)
         except BaseException as e:
             with self._lock:
                 if self._inflight.get(key) is flight:

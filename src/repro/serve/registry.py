@@ -20,6 +20,18 @@ name layer of that fleet:
   hands back the re-fitted model. Models already handed out keep
   scoring — eviction forgets a reference, it never mutates a model.
 
+``refresh`` is the streaming hook (docs/streaming.md): called with
+``append=`` (new rows for the same name) it updates the recipe in place
+— same quota, same serve kwargs, recipe key re-derived in O(Δm) through
+an ``ExtendableFingerprint`` instead of re-hashing the whole set — and
+routes the re-fit through the cached model's ``SolverArtifact`` as a
+warm delta-solve. The warm route is gated by the score-distribution
+drift detector (``repro.serve.drift``): appended rows that score far
+from the cached slab force a full cold refit instead (a warm seed from
+the wrong distribution is misdirection, not a head start). Every
+refresh records which way it went in the per-model ``refresh_modes``
+counters.
+
 The registry owns *names and recipes only*. Admission — quota
 enforcement, deadline-aware window flushing — lives in
 ``repro.serve.admission`` and reads the per-model ``quota`` recorded
@@ -31,8 +43,12 @@ import dataclasses
 import threading
 from typing import Dict, Optional, Tuple
 
+import numpy as np
+
 from repro.core.ocssvm import SlabSpec
-from repro.serve.model_cache import ModelCache, ServingModel, recipe_key
+from repro.serve.drift import DEFAULT_THRESHOLD, DriftReport, score_drift
+from repro.serve.model_cache import (ExtendableFingerprint, ModelCache,
+                                     ServingModel, recipe_key)
 
 
 class RegistryError(Exception):
@@ -100,6 +116,15 @@ class ModelRegistry:
         # reset — admission controllers compare it to know when their
         # memoized per-model services went stale.
         self._versions: Dict[str, int] = {}
+        # Per-name refresh routing counters ({"warm": n, "cold": n}) and
+        # the evidence behind the latest routing decision — operators
+        # audit why a refresh refit cold via refresh_stats(name).
+        self.refresh_modes: Dict[str, Dict[str, int]] = {}
+        self._last_drift: Dict[str, Optional[DriftReport]] = {}
+        self._last_warm_stats: Dict[str, Optional[dict]] = {}
+        # Per-name extendable data fingerprint: lets an append-refresh
+        # re-key the recipe in O(Δm) (built lazily on first append).
+        self._fps: Dict[str, ExtendableFingerprint] = {}
         # RLock: register's replace path consults _key_shared under it
         self._lock = threading.RLock()
 
@@ -137,6 +162,7 @@ class ModelRegistry:
                 if not self._key_shared(old.key, name):
                     self.cache.evict(old.key)
                 self._versions[name] = self._versions.get(name, 0) + 1
+                self._fps.pop(name, None)   # new data, new fingerprint
                 if quota is None:     # replace keeps the quota too
                     quota = old.quota
             recipe = ModelRecipe(
@@ -160,6 +186,10 @@ class ModelRegistry:
             self.cache.evict(recipe.key)
         with self._lock:
             self._versions[name] = self._versions.get(name, 0) + 1
+            self._fps.pop(name, None)
+            self.refresh_modes.pop(name, None)
+            self._last_drift.pop(name, None)
+            self._last_warm_stats.pop(name, None)
 
     # -- routing ------------------------------------------------------------
     def get(self, name: str) -> ServingModel:
@@ -238,10 +268,122 @@ class ModelRegistry:
         with self._lock:
             return self._versions.get(name, 0)
 
-    def refresh(self, name: str) -> ServingModel:
-        """Evict then re-fit now; returns the fresh model."""
-        self.evict(name)
-        return self.get(name)
+    def refresh(self, name: str, append=None, *, X=None,
+                mode: str = "auto",
+                drift_threshold: float = DEFAULT_THRESHOLD) -> ServingModel:
+        """Re-fit ``name`` now — warm delta-solve by default; returns
+        the fresh model.
+
+        ``append`` adds rows to the recipe's training set (cast to its
+        dtype); ``X`` replaces the set outright; neither re-fits on the
+        recipe's current data. Either way the recipe is updated in
+        place — same name, same ``quota``, same serve kwargs — and the
+        admission state layered on top (open windows, observed bucket
+        latencies) survives the version bump untouched. Append-refresh
+        re-keys the recipe in O(Δm): the cached
+        ``ExtendableFingerprint`` hashes only the appended rows.
+
+        Routing: when the cached model carries a ``SolverArtifact``,
+        ``mode="auto"`` runs the score-distribution drift detector on
+        the candidate set and warm-starts the re-fit from the artifact
+        (``fit_update`` through the cache) unless it drifted past
+        ``drift_threshold`` — then, and for ``mode="cold"`` or a
+        missing artifact, the re-fit runs cold. ``mode="warm"`` skips
+        the detector. The decision lands in ``refresh_modes[name]``
+        and ``refresh_stats(name)``.
+        """
+        if mode not in ("auto", "warm", "cold"):
+            raise ValueError(f"unknown refresh mode {mode!r}; "
+                             "expected 'auto', 'warm' or 'cold'")
+        if append is not None and X is not None:
+            raise ValueError("pass append= (delta rows) or X= (full "
+                             "replacement), not both")
+        recipe = self._recipe(name)
+        old_key = recipe.key
+
+        fp_new = None
+        if append is not None:
+            base = np.asarray(recipe.X)
+            app = np.asarray(append, base.dtype)
+            if app.ndim != base.ndim or app.shape[1:] != base.shape[1:]:
+                raise ValueError(
+                    f"append rows {app.shape} do not extend the recipe's "
+                    f"training set {base.shape}")
+            X_new = np.concatenate([base, app])
+            with self._lock:
+                fp_old = self._fps.get(name)
+            if fp_old is None or fp_old.shape != base.shape:
+                fp_old = ExtendableFingerprint(base)   # first append: O(m)
+            fp_new = fp_old.extend(app)                # O(Δm) from here on
+            if fp_new is None:                         # sampled regime
+                fp_new = ExtendableFingerprint(X_new)
+        elif X is not None:
+            X_new = X
+            fp_new = ExtendableFingerprint(X_new)
+        else:
+            X_new = recipe.X
+
+        new_key = old_key if fp_new is None else recipe_key(
+            X_new, recipe.spec, _fingerprint=fp_new.key, **recipe.kwargs())
+
+        # The warm seed is the OLD entry's artifact — read it before the
+        # eviction below forgets the entry.
+        prev = self.cache.lookup(old_key)
+        artifact = getattr(prev, "artifact", None)
+
+        report = None
+        route = mode
+        if artifact is None:
+            route = "cold"
+        elif mode == "auto":
+            # For an append, test the appended rows alone: a strided
+            # sample of the full set would dilute a small shifted delta
+            # below any threshold. What is new is what can have drifted.
+            cand = app if append is not None else X_new
+            report = score_drift(artifact, cand, threshold=drift_threshold)
+            route = "cold" if report.drifted else "warm"
+
+        with self._lock:
+            self._recipes[name] = recipe = dataclasses.replace(
+                recipe, X=X_new, key=new_key)
+            if fp_new is not None:
+                self._fps[name] = fp_new
+        # Same ordering contract as evict(): drop the entry, THEN bump —
+        # a consumer racing in between memoizes (old model, old version)
+        # at worst, which the bump invalidates.
+        if not self._key_shared(old_key, name):
+            self.cache.evict(old_key)
+        with self._lock:
+            self._versions[name] = self._versions.get(name, 0) + 1
+
+        warm_stats: Optional[dict] = {} if route == "warm" else None
+        served = self.cache.get_or_fit(
+            X_new, recipe.spec,
+            warm_start=artifact if route == "warm" else None,
+            warm_stats_out=warm_stats, _key=new_key, **recipe.kwargs())
+        # fit_update falls back cold below its overlap floor — count
+        # what actually ran, not what the gate asked for.
+        if warm_stats and warm_stats.get("mode") == "cold":
+            route = "cold"
+        with self._lock:
+            counts = self.refresh_modes.setdefault(
+                name, {"warm": 0, "cold": 0})
+            counts[route] += 1
+            self._last_drift[name] = report
+            self._last_warm_stats[name] = warm_stats
+        return served
+
+    def refresh_stats(self, name: str) -> dict:
+        """How this name's refreshes were routed: the ``refresh_modes``
+        counters plus the latest drift report and warm-solve stats."""
+        self._recipe(name)                  # typed error for unknown names
+        with self._lock:
+            return {
+                "modes": dict(self.refresh_modes.get(
+                    name, {"warm": 0, "cold": 0})),
+                "last_drift": self._last_drift.get(name),
+                "last_warm": self._last_warm_stats.get(name),
+            }
 
     # -- introspection ------------------------------------------------------
     def names(self) -> Tuple[str, ...]:

@@ -23,6 +23,12 @@ value nested directly under one — per-bucket tables) are gated:
   enough for a 25% gate, while individual per-candidate ``time_s`` rows
   jitter far beyond it — those still fail the job when DROPPED.
 
+Rate leaves (a key ending in ``_rate`` — the soak bench's
+``deadline_miss_rate``) are gated as an absolute ceiling instead of a
+ratio: ``fresh <= baseline + --rate-slack``. With the default slack of
+0 and a committed baseline of 0 misses, the first fresh miss fails the
+job — exactly the property a deadline soak wants.
+
 Non-timing leaves (iteration counts, MCC, speedups) participate in the
 missing-row check only. The full comparison is written to ``--out`` and
 shipped as a CI artifact either way.
@@ -74,8 +80,19 @@ def _is_timing(path: str) -> bool:
     return len(segs) >= 2 and segs[-2].endswith("_s")
 
 
+def _is_rate(path: str) -> bool:
+    """A leaf whose key ends in ``_rate`` is gated as an ABSOLUTE
+    ceiling, not a ratio: ratios are meaningless against the baselines
+    that matter most (a committed deadline-miss rate of exactly 0), so
+    the gate is ``fresh <= baseline + rate_slack``. A soak baseline of 0
+    misses therefore fails the job on the FIRST fresh miss."""
+    segs = [s for s in path.replace("]", "").replace("[", ".").split(".")
+            if s]
+    return bool(segs) and segs[-1].endswith("_rate")
+
+
 def compare_pair(fresh_path: str, baseline_path: str, *, tolerance: float,
-                 min_seconds: float,
+                 min_seconds: float, rate_slack: float = 0.0,
                  gate_only: Optional[str] = None) -> dict:
     with open(fresh_path) as fh:
         fresh = flatten(json.load(fh))
@@ -89,6 +106,20 @@ def compare_pair(fresh_path: str, baseline_path: str, *, tolerance: float,
     for path, base_v in sorted(baseline.items()):
         if path not in fresh:
             missing.append(path)
+            continue
+        if _is_rate(path) and isinstance(base_v, (int, float)):
+            new_v = fresh[path]
+            if not isinstance(new_v, (int, float)):
+                missing.append(path)
+                continue
+            entry = {"path": path, "baseline_rate": base_v,
+                     "fresh_rate": new_v, "slack": rate_slack}
+            if gate_only is not None and not re.search(gate_only, path):
+                ungated.append(entry)
+                continue
+            checked += 1
+            if float(new_v) > float(base_v) + rate_slack:
+                regressions.append(entry)
             continue
         if not (_is_timing(path) and isinstance(base_v, (int, float))):
             continue
@@ -127,6 +158,10 @@ def main(argv=None) -> int:
                     help="allowed fractional slowdown (default 0.25)")
     ap.add_argument("--min-seconds", type=float, default=0.05,
                     help="baseline timings under this are not gated")
+    ap.add_argument("--rate-slack", type=float, default=0.0,
+                    help="allowed ABSOLUTE increase for *_rate leaves "
+                         "(default 0.0: a zero-miss baseline fails on "
+                         "the first fresh miss)")
     ap.add_argument("--gate-only", default=None, metavar="REGEX",
                     help="gate only timing paths matching this regex "
                          "(missing-row checks still cover everything)")
@@ -136,12 +171,13 @@ def main(argv=None) -> int:
 
     results = [compare_pair(f, b, tolerance=args.tolerance,
                             min_seconds=args.min_seconds,
+                            rate_slack=args.rate_slack,
                             gate_only=args.gate_only)
                for f, b in args.pairs]
     ok = all(r["ok"] for r in results)
     report = {"ok": ok, "tolerance": args.tolerance,
-              "min_seconds": args.min_seconds, "gate_only": args.gate_only,
-              "pairs": results}
+              "min_seconds": args.min_seconds, "rate_slack": args.rate_slack,
+              "gate_only": args.gate_only, "pairs": results}
     with open(args.out, "w") as fh:
         json.dump(report, fh, indent=1)
 
@@ -155,8 +191,12 @@ def main(argv=None) -> int:
         for path in r["missing_rows"]:
             print(f"  missing: {path}")
         for e in r["regressions"]:
-            print(f"  slowdown: {e['path']} {e['baseline_s']:.4f}s -> "
-                  f"{e['fresh_s']:.4f}s ({e['ratio']:.2f}x)")
+            if "baseline_rate" in e:
+                print(f"  rate: {e['path']} {e['baseline_rate']:.4f} -> "
+                      f"{e['fresh_rate']:.4f} (slack {e['slack']:.4f})")
+            else:
+                print(f"  slowdown: {e['path']} {e['baseline_s']:.4f}s -> "
+                      f"{e['fresh_s']:.4f}s ({e['ratio']:.2f}x)")
     return 0 if ok else 1
 
 

@@ -21,7 +21,12 @@ def __getattr__(name):
         # matter which is touched first.
         import repro.serve as serve_pkg
         return serve_pkg
+    if name == "serve_async":
+        # the coroutine front door: awaits scores through the
+        # process-default admission controller + background driver
+        from repro.serve.async_driver import serve_async
+        return serve_async
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-__all__ = ["fit", "fit_update", "serve"]
+__all__ = ["fit", "fit_update", "serve", "serve_async"]

@@ -23,6 +23,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.batched_smo import solve_blocked
 from repro.core.distributed_smo import solve_blocked_distributed
@@ -246,7 +247,13 @@ def fit_update(
     is more misdirection than head start (most of the f-cache would be
     corrections), so the call falls back to a cold ``fit`` — the routing
     is recorded in ``stats_out`` (``mode``: "warm" | "cold", plus the
-    overlap/fresh/expired/correction counts).
+    overlap/fresh/expired/correction counts). The same cold route — with
+    ``stats_out["fallback"]`` recording why — is taken when the warm
+    path cannot run at all: an explicit ``gamma0`` seed among the kwargs
+    (the solvers take ``warm=`` or ``gamma0=``, not both), or an engine
+    raising ``NotImplementedError`` from incremental structures
+    mid-update (the sharded Gram facade's ``append_rows``). A streaming
+    refresh degrades to a cold refit; it never surfaces a traceback.
 
     ``spec`` defaults to the artifact's; kwargs flow to ``fit``
     (strategy, precision, tol, ...). ``precision`` defaults to the
@@ -261,6 +268,26 @@ def fit_update(
         spec = art.spec
     warm, info = prepare_warm_start(art, X_new, spec, precision=precision)
     mode = "warm" if info.overlap_frac >= min_overlap else "cold"
+    fallback = None
+    g0 = kwargs.get("gamma0")
+    if g0 is not None:
+        if int(np.shape(g0)[0]) == int(X_new.shape[0]):
+            # An explicit dual seed and a warm-start seed are mutually
+            # exclusive down in the solvers ("pass warm= or gamma0=,
+            # not both") — detect it HERE and take the documented cold
+            # route (where gamma0 IS the seed) instead of surfacing the
+            # solver's ValueError after warm state was prepared.
+            mode = "cold"
+            fallback = "gamma0_conflict"
+        else:
+            # A seed pinned to a previous data shape (e.g. a registry
+            # recipe carrying gamma0 in its fit kwargs, refreshed with
+            # appended rows) cannot seed ANY fit on X_new — drop it so
+            # the warm/cold routing above stands, rather than crash
+            # whichever route it reaches.
+            kwargs.pop("gamma0")
+            fallback = "gamma0_stale_dropped"
+    p_injected = False
     if mode == "warm" and "P" not in kwargs:
         # A delta-solve's violators concentrate on the delta: the fresh
         # rows must acquire mass and the corrected rows re-equilibrate,
@@ -275,13 +302,32 @@ def fit_update(
         moving = info.n_fresh + info.n_corr
         kwargs["P"] = max(8, min(64, info.m // 16,
                                  1 << max(moving // 2, 1).bit_length()))
+        p_injected = True
     if stats_out is not None:
         stats_out.update(dataclasses.asdict(info))
         stats_out["mode"] = mode
         stats_out["P"] = kwargs.get("P")
+        if fallback is not None:
+            stats_out["fallback"] = fallback
     if mode == "cold":
         return fit(X_new, spec, precision=precision, **kwargs)
-    return fit(X_new, spec, precision=precision, warm_start=warm, **kwargs)
+    try:
+        return fit(X_new, spec, precision=precision, warm_start=warm,
+                   **kwargs)
+    except NotImplementedError as e:
+        # The documented cold-refit fallback for engines whose
+        # incremental structures cannot mutate mid-update — e.g. the
+        # sharded Gram facade raising from append_rows/expire_rows. A
+        # streaming refresh must degrade to a cold refit (counted in the
+        # registry's refresh_modes), never surface a traceback after the
+        # warm state was prepared.
+        if stats_out is not None:
+            stats_out["mode"] = "cold"
+            stats_out["fallback"] = f"warm_unsupported: {e}"
+        if p_injected:
+            kwargs.pop("P", None)   # the delta-scaled working set was
+            #                         sized for the warm route only
+        return fit(X_new, spec, precision=precision, **kwargs)
 
 
 def serve(X: Optional[Array] = None, spec: Optional[SlabSpec] = None, *,

@@ -16,6 +16,16 @@ per-bucket latency/throughput counters.
     # before the quota can bind — the controller warns if it cannot)
     PYTHONPATH=src python -m repro.launch.serve_slab \
         --models a=rbf:0.5 --models b=linear --deadline-ms 20 --quota 256
+
+    # same fleet, flushed by the background event-loop driver instead of
+    # the submit loop polling (deadlines honored with nobody polling)
+    PYTHONPATH=src python -m repro.launch.serve_slab \
+        --models a=rbf:0.5 --models b=linear --deadline-ms 20 --driver
+
+    # cross-process fleet: one process fits and publishes the packed
+    # model to shared memory, N others attach (bitwise-identical, no fit)
+    PYTHONPATH=src python -m repro.launch.serve_slab --shm-publish warm-rbf
+    PYTHONPATH=src python -m repro.launch.serve_slab --shm-attach warm-rbf
 """
 from __future__ import annotations
 
@@ -30,9 +40,9 @@ import repro
 from repro.core import SlabSpec, linear, poly, rbf
 from repro.data import make_toy
 from repro.launch.mesh import make_test_mesh
-from repro.serve import (AdmissionController, ModelRegistry,
-                         QuotaExceededError, ScoringService,
-                         run_request_stream)
+from repro.serve import (AdmissionController, AsyncDriver, ModelRegistry,
+                         QuotaExceededError, ScoringService, attach,
+                         live_refs, publish, run_request_stream)
 
 
 def _make_kernel(name: str, gamma: float):
@@ -97,23 +107,42 @@ def _run_multi_model(args):
     rng = np.random.default_rng(args.seed)
     sizes = rng.integers(args.min_batch, args.max_batch + 1,
                          size=args.requests)
+    requests = [np.asarray(make_toy(jax.random.PRNGKey(1000 + i), int(n))[0])
+                for i, n in enumerate(sizes)]
     deadline_s = args.deadline_ms / 1e3 if args.deadline_ms else None
     handles, rejected = [], 0
+
+    def submit_stream():
+        for i, q in enumerate(requests):
+            model = names[i % len(names)]
+            deadline = (ctrl.clock() + deadline_s) if deadline_s else None
+            try:
+                handles.append(ctrl.submit(model, q, deadline=deadline))
+            except QuotaExceededError:
+                rejected += 1
+            if not args.driver:
+                ctrl.poll()
+
     t0 = time.perf_counter()
-    for i, n in enumerate(sizes):
-        q = np.asarray(make_toy(jax.random.PRNGKey(1000 + i), int(n))[0])
-        model = names[i % len(names)]
-        deadline = (ctrl.clock() + deadline_s) if deadline_s else None
-        try:
-            handles.append(ctrl.submit(model, q, deadline=deadline))
-        except QuotaExceededError:
-            rejected += 1
-        ctrl.poll()
-    ctrl.drain()
+    if args.driver:
+        # the background driver owns every flush: it sleeps until the
+        # earliest pending window is due (deadline pressure, window age,
+        # bucket fill) and polls — the submit loop never does
+        with AsyncDriver(ctrl):
+            submit_stream()
+            wait_until = time.monotonic() + 60.0
+            while (not all(h.done for h in handles)
+                   and time.monotonic() < wait_until):
+                time.sleep(0.002)
+        # context exit stops the driver after a final drain
+    else:
+        submit_stream()
+        ctrl.drain()
     stream_s = time.perf_counter() - t0
     served_q = sum(h.n for h in handles)
-    print(f"stream: {len(handles)}/{args.requests} requests admitted "
-          f"({rejected} over quota) / {served_q} queries in "
+    mode = "driver" if args.driver else "inline poll"
+    print(f"stream[{mode}]: {len(handles)}/{args.requests} requests "
+          f"admitted ({rejected} over quota) / {served_q} queries in "
           f"{stream_s*1e3:.0f} ms ({served_q/max(stream_s, 1e-9):.0f} q/s)")
     for line in ctrl.stats_lines():
         print("  " + line)
@@ -172,23 +201,53 @@ def main(argv=None):
                          "(multi-model path; default: unlimited)")
     ap.add_argument("--max-wait-ms", type=float, default=50.0,
                     help="age bound for deadline-less admission windows")
+    ap.add_argument("--driver", action="store_true",
+                    help="flush via the background AsyncDriver instead "
+                         "of polling from the submit loop (multi-model "
+                         "path)")
+    ap.add_argument("--shm-publish", type=str, default=None, metavar="KEY",
+                    help="publish the packed model to shared memory "
+                         "under KEY (single-model path)")
+    ap.add_argument("--shm-attach", type=str, default=None, metavar="KEY",
+                    help="attach the packed model published under KEY "
+                         "instead of fitting (single-model path)")
     args = ap.parse_args(argv)
 
     if args.models:
         return _run_multi_model(args)
 
-    spec = SlabSpec(nu1=args.nu1, nu2=args.nu2, eps=args.eps,
-                    kernel=_kernel(args))
-    X, _ = make_toy(jax.random.PRNGKey(args.seed), args.m)
+    leases = []
+    if args.shm_attach:
+        # worker side of the cross-process fleet: rebuild the packed
+        # model from shared memory — no fit, bitwise-identical scores
+        t0 = time.perf_counter()
+        sm, lease = attach(args.shm_attach)
+        leases.append(lease)
+        cold_s = time.perf_counter() - t0
+        print(f"attach[{args.shm_attach!r}]: {sm.n_sv} SVs packed "
+              f"{tuple(sm.t_pad.shape)} [{sm.precision}] in "
+              f"{cold_s*1e3:.0f} ms (no fit; "
+              f"{live_refs(args.shm_attach)} live leases)")
+    else:
+        spec = SlabSpec(nu1=args.nu1, nu2=args.nu2, eps=args.eps,
+                        kernel=_kernel(args))
+        X, _ = make_toy(jax.random.PRNGKey(args.seed), args.m)
 
-    t0 = time.perf_counter()
-    sm = repro.serve(X, spec, tol=args.tol, P=16, precision=args.precision)
-    cold_s = time.perf_counter() - t0
-    cache = repro.serve.default_cache()
-    print(f"serve: m={args.m} -> {sm.n_sv} SVs packed "
-          f"{tuple(sm.t_pad.shape)} [{args.precision}] in "
-          f"{cold_s*1e3:.0f} ms "
-          f"(cache {cache.hits} hits / {cache.misses} misses)")
+        t0 = time.perf_counter()
+        sm = repro.serve(X, spec, tol=args.tol, P=16,
+                         precision=args.precision)
+        cold_s = time.perf_counter() - t0
+        cache = repro.serve.default_cache()
+        print(f"serve: m={args.m} -> {sm.n_sv} SVs packed "
+              f"{tuple(sm.t_pad.shape)} [{args.precision}] in "
+              f"{cold_s*1e3:.0f} ms "
+              f"(cache {cache.hits} hits / {cache.misses} misses)")
+    if args.shm_publish:
+        leases.append(publish(sm, args.shm_publish))
+        print(f"publish[{args.shm_publish!r}]: segment live, "
+              f"{live_refs(args.shm_publish)} leases — workers attach "
+              f"with --shm-attach {args.shm_publish} (last lease out "
+              f"unlinks)")
 
     if args.sharded_devices:
         mesh = make_test_mesh((args.sharded_devices,), ("data",))
@@ -223,11 +282,13 @@ def main(argv=None):
     if args.json:
         with open(args.json, "w") as fh:
             json.dump({"m": args.m, "n_sv": sm.n_sv,
-                       "precision": args.precision, "cold_s": cold_s,
+                       "precision": sm.precision, "cold_s": cold_s,
                        "stream_s": stream_s, "requests": args.requests,
                        "queries": total_q,
                        "buckets": svc.stats_dict()}, fh, indent=2)
         print(f"wrote {args.json}")
+    for lease in leases:
+        lease.close()
 
 
 if __name__ == "__main__":

@@ -14,7 +14,14 @@ Five layers, each usable on its own:
   routing over the cache, with per-model admission quotas and
   drift-gated streaming ``refresh`` (``drift`` holds the KS detector).
 * ``admission``   — ``AdmissionController``: deadline-aware coalescing
-  windows in front of ``ScoringService.flush``, typed quota rejection.
+  windows in front of ``ScoringService.flush``, typed quota rejection;
+  continuous (a flush re-opens the window) with awaitable admission.
+* ``async_driver``— ``AsyncDriver``: the background event-loop driver
+  that wakes on the earliest pending deadline and polls, plus the
+  ``serve_async`` coroutine front door.
+* ``shm_registry``— cross-process fleet: packed models published to
+  ``multiprocessing.shared_memory`` (refcounted, liveness-pruned) so N
+  workers attach — bitwise-identically — to one warm fleet.
 
 The package itself is callable — ``repro.serve(X, spec)`` returns a warm
 ``ServingModel`` from the default cache, and ``repro.serve(X, spec,
@@ -37,6 +44,11 @@ from repro.serve.model_cache import (ExtendableFingerprint, ModelCache,
                                      recipe_key, spec_key)
 from repro.serve.admission import (AdmissionController, AdmissionHandle,
                                    QuotaExceededError)
+from repro.serve.async_driver import (AsyncDriver, DriverCrashed,
+                                      default_driver, reset_default_driver,
+                                      serve_async)
+from repro.serve.shm_registry import (ShmKeyError, ShmLease, attach,
+                                      attach_or_publish, live_refs, publish)
 from repro.serve.drift import DriftReport, ks_statistic, score_drift
 from repro.serve.registry import (DuplicateModelError, ModelRecipe,
                                   ModelRegistry, RegistryError,
@@ -54,6 +66,10 @@ __all__ = [
     "DuplicateModelError", "ModelRecipe", "ModelRegistry", "RegistryError",
     "UnknownModelError", "default_registry",
     "AdmissionController", "AdmissionHandle", "QuotaExceededError",
+    "AsyncDriver", "DriverCrashed", "default_driver",
+    "reset_default_driver", "serve_async",
+    "ShmKeyError", "ShmLease", "attach", "attach_or_publish", "live_refs",
+    "publish",
 ]
 
 

@@ -62,6 +62,10 @@ class BatchScorer:
         self.mesh = mesh
         self.data_axis = data_axis
         self._d_pad = int(model.t_pad.shape[1])
+        # Buckets whose executable warmup() has pre-compiled: the service
+        # reads this to avoid recording a warmed bucket's first launch as
+        # a cold (compile-laden) observation.
+        self.warmed_buckets: set = set()
         if mesh is not None and data_axis not in mesh.shape:
             raise ValueError(f"mesh has no axis {data_axis!r}: "
                              f"{tuple(mesh.shape)}")
@@ -132,22 +136,42 @@ class BatchScorer:
     def score(self, q) -> Array:
         """Slab decision values (n, d) -> (n,); every shape hits a cached
         bucket executable. Batches beyond one launch's capacity are
-        chunked (each chunk reuses its cached executable)."""
+        chunked (each chunk reuses its cached executable). numpy inputs
+        (the service boundary) come back as numpy — see ``_unpad``."""
         self._check(q)
         n = int(q.shape[0])
         cap = self.chunk_rows()
         if n > cap:
             chunks = [self._score_once(q[i:i + cap])
                       for i in range(0, n, cap)]
+            xp = np if isinstance(chunks[0], np.ndarray) else jnp
             # only the last chunk carries padding rows
-            return jnp.concatenate(chunks)[:n]
+            return xp.concatenate(chunks)[:n]
         return self._score_once(q)
+
+    def _unpad(self, out: Array, n: int, host: bool):
+        """Drop the padding rows of one launch's output.
+
+        The device slice ``out[:n]`` compiles one slice program per
+        DISTINCT (n, bucket) pair — under a coalescing service the
+        window row count varies freely, so that is a fresh ~10-30ms
+        trace+compile on nearly every flush, an order of magnitude over
+        the launch it trims. numpy requests (the service boundary)
+        therefore unpad host-side, completing ``_pad_queries``'s
+        no-per-request-shape-device-programs promise on the way out;
+        jax-array requests keep a device result.
+        """
+        if host:
+            return np.asarray(out)[:n]
+        return out[:n]
 
     def _score_once(self, q) -> Array:
         n = int(q.shape[0])
+        host = isinstance(q, np.ndarray)
         if self.mesh is not None:
             return self._score_sharded(q, n)
-        return self._score_bucket(self._pad_queries(q, bucket_for(n)))[:n]
+        out = self._score_bucket(self._pad_queries(q, bucket_for(n)))
+        return self._unpad(out, n, host)
 
     # -- sharded path -------------------------------------------------------
     def _score_sharded(self, q, n: int) -> Array:
@@ -170,7 +194,7 @@ class BatchScorer:
                        out_specs=P(self.data_axis))
         with mesh:
             out = fn(q_pad)
-        return out[:n]
+        return self._unpad(out, n, isinstance(q, np.ndarray))
 
     def warmup(self) -> None:
         """Pre-compile every bucket executable the scorer will serve with.
@@ -187,3 +211,4 @@ class BatchScorer:
         for b in BUCKETS:
             q = jnp.zeros((b * nd, self.model.d), jnp.float32)
             jax.block_until_ready(self._score_once(q))
+            self.warmed_buckets.add(b)

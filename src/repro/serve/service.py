@@ -31,15 +31,26 @@ from repro.serve.scorer import BUCKETS, BatchScorer
 
 @dataclasses.dataclass
 class BucketStats:
-    """Counters for one padding bucket."""
+    """Counters for one padding bucket.
 
-    batches: int = 0          # kernel launches
+    A launch recorded ``cold=True`` (the bucket's first launch on an
+    un-warmed executable, which pays trace + compile) is counted in the
+    throughput totals but EXCLUDED from ``mean_latency_s`` once any warm
+    observation exists — the admission layer's deadline estimates read
+    that mean, and one compile-laden sample would make every window
+    after a model refresh flush pathologically early.
+    """
+
+    batches: int = 0          # kernel launches (cold included)
     queries: int = 0          # live (unpadded) rows scored
     requests: int = 0         # handles served
-    total_s: float = 0.0      # summed launch wall-clock
+    total_s: float = 0.0      # summed launch wall-clock (cold included)
     last_s: float = 0.0
+    cold_batches: int = 0     # compile-laden launches
+    cold_s: float = 0.0       # their summed wall-clock
 
-    def record(self, queries: int, requests: int, dt: float) -> None:
+    def record(self, queries: int, requests: int, dt: float,
+               cold: bool = False) -> None:
         """One launch's worth of accounting — flush records each kernel
         launch individually, so a record IS a launch."""
         self.batches += 1
@@ -47,9 +58,21 @@ class BucketStats:
         self.requests += requests
         self.total_s += dt
         self.last_s = dt
+        if cold:
+            self.cold_batches += 1
+            self.cold_s += dt
+
+    @property
+    def warm_batches(self) -> int:
+        return self.batches - self.cold_batches
 
     @property
     def mean_latency_s(self) -> float:
+        """Mean launch latency for ESTIMATES: warm launches only, unless
+        cold launches are all we have (then the cold mean — which
+        over-estimates and therefore flushes early, the safe side)."""
+        if self.warm_batches > 0:
+            return (self.total_s - self.cold_s) / self.warm_batches
         return self.total_s / self.batches if self.batches else 0.0
 
     @property
@@ -65,10 +88,23 @@ class Pending:
         self.n = n
         self._result = None
         self._done = False
+        self._done_cbs: List[Callable[[], None]] = []
 
     def _set(self, scores) -> None:
         self._result = scores
         self._done = True
+        cbs, self._done_cbs = self._done_cbs, []
+        for cb in cbs:
+            cb()
+
+    def add_done_callback(self, cb: Callable[[], None]) -> None:
+        """Run ``cb`` when the scores land (immediately if they already
+        have). Callbacks fire on the flushing thread — the async
+        admission layer uses this to resolve awaitables without polling."""
+        if self._done:
+            cb()
+        else:
+            self._done_cbs.append(cb)
 
     @property
     def done(self) -> bool:
@@ -103,6 +139,32 @@ class ScoringService:
         # first-seen bucket must not hit "dict changed size". Single
         # .get() reads stay lock-free (atomic under the GIL).
         self._stats_lock = threading.Lock()
+        # Buckets this service has already launched: the FIRST launch of
+        # a bucket neither here nor pre-warmed on the scorer pays trace +
+        # compile and is recorded cold (excluded from deadline estimates).
+        self._launched: set = set()
+        # Per-group flush overhead: wall-clock spent OUTSIDE the kernel
+        # launches (concat, host transfer, scatter, done callbacks).
+        # Roughly fixed per window, so for fast models it dominates the
+        # launches — an estimate built from launch means alone would
+        # have the admission layer flush too late no matter the safety
+        # factor (a multiplier cannot cover an additive cost).
+        self.flush_groups: int = 0
+        self.flush_overhead_s: float = 0.0
+
+    @property
+    def mean_flush_overhead_s(self) -> float:
+        """Observed mean non-launch cost of serving one coalesced group
+        (0.0 until a flush has run) — the additive term the admission
+        layer's deadline estimate charges per window."""
+        if self.flush_groups == 0:
+            return 0.0
+        return self.flush_overhead_s / self.flush_groups
+
+    def warmup(self) -> None:
+        """Pre-compile every bucket executable on the path this service
+        serves with; launches after a warmup are never recorded cold."""
+        self.scorer.warmup()
 
     @property
     def queued_rows(self) -> int:
@@ -143,6 +205,8 @@ class ScoringService:
                 group.append(item)
                 rows += item[1].n
 
+            t_group = self.clock()
+            launch_s = 0.0
             if len(group) == 1:
                 batch = np.asarray(group[0][0], np.float32)
             else:
@@ -163,22 +227,39 @@ class ScoringService:
             parts = []
             off = 0
             for i, (chunk_rows, bucket) in enumerate(plan):
+                cold = (bucket not in self._launched
+                        and bucket not in getattr(self.scorer,
+                                                  "warmed_buckets", ()))
+                self._launched.add(bucket)
                 t0 = self.clock()
                 part = self.scorer.score(batch[off:off + chunk_rows])
                 jax.block_until_ready(part)
                 dt = self.clock() - t0
+                launch_s += dt
                 with self._stats_lock:
                     self.stats.setdefault(bucket, BucketStats()).record(
-                        chunk_rows, len(group) if i == 0 else 0, dt)
-                parts.append(part)
+                        chunk_rows, len(group) if i == 0 else 0, dt,
+                        cold=cold)
+                # Host-side from here: the launch is already synced (the
+                # timing above blocks), and scattering device arrays
+                # compiles one slice executable per DISTINCT (offset,
+                # length) — under continuous admission the window
+                # composition always varies, so that is a fresh compile
+                # on nearly every flush, dwarfing the launch it scatters.
+                # numpy slices are O(1) views; results are host arrays,
+                # symmetric with the host-array request boundary.
+                parts.append(np.asarray(part))
                 off += chunk_rows
-            scores = (parts[0] if len(parts) == 1
-                      else jax.numpy.concatenate(parts))
+            scores = parts[0] if len(parts) == 1 else np.concatenate(parts)
 
             off = 0
             for _, p in group:
                 p._set(scores[off:off + p.n])
                 off += p.n
+            with self._stats_lock:
+                self.flush_groups += 1
+                self.flush_overhead_s += max(
+                    0.0, (self.clock() - t_group) - launch_s)
         return launches
 
     def stats_lines(self) -> List[str]:
@@ -191,7 +272,8 @@ class ScoringService:
             lines.append(
                 f"bucket={b},batches={s.batches},requests={s.requests},"
                 f"queries={s.queries},mean_ms={s.mean_latency_s*1e3:.2f},"
-                f"last_ms={s.last_s*1e3:.2f},qps={s.throughput_qps:.0f}")
+                f"last_ms={s.last_s*1e3:.2f},qps={s.throughput_qps:.0f},"
+                f"cold={s.cold_batches}")
         return lines
 
     def stats_dict(self) -> Dict[int, Dict[str, float]]:

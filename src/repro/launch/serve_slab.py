@@ -113,6 +113,7 @@ def _run_multi_model(args):
     handles, rejected = [], 0
 
     def submit_stream():
+        nonlocal rejected
         for i, q in enumerate(requests):
             model = names[i % len(names)]
             deadline = (ctrl.clock() + deadline_s) if deadline_s else None

@@ -117,8 +117,13 @@ class AsyncDriver:
 
     def __exit__(self, *exc) -> None:
         # a crash raised here would mask the body's exception; prefer
-        # the body's, fall back to the crash
-        self.stop(drain=exc == (None, None, None) or exc[0] is None)
+        # the body's, fall back to the crash (still on .crashed)
+        body_failed = exc and exc[0] is not None
+        try:
+            self.stop(drain=not body_failed)
+        except DriverCrashed:
+            if not body_failed:
+                raise
 
     # -- the loop ------------------------------------------------------------
     def _wake(self) -> None:

@@ -77,12 +77,30 @@ def _digest(key: str) -> str:
 @contextmanager
 def _flock(path: Path):
     import fcntl
-    with open(path, "a+") as f:
-        fcntl.flock(f, fcntl.LOCK_EX)
+    while True:
+        f = open(path, "a+")
         try:
+            fcntl.flock(f, fcntl.LOCK_EX)
+            # The previous holder may have unlinked the lock file after
+            # releasing it (last-lease cleanup): a lock held on that
+            # dead inode excludes nobody who opens the path fresh.
+            # Proceed only if the locked fd still IS the path; retry on
+            # the new inode otherwise.
+            try:
+                st = os.stat(path)
+            except FileNotFoundError:
+                continue
+            fst = os.fstat(f.fileno())
+            if (st.st_dev, st.st_ino) != (fst.st_dev, fst.st_ino):
+                continue
             yield
+            return
         finally:
-            fcntl.flock(f, fcntl.LOCK_UN)
+            try:
+                fcntl.flock(f, fcntl.LOCK_UN)
+            except OSError:
+                pass
+            f.close()
 
 
 def _atomic_write(path: Path, text: str) -> None:
@@ -108,19 +126,43 @@ def _read_refs(path: Path) -> list:
         return []
 
 
+def _tracker_name(shm) -> str:
+    return getattr(shm, "_name", "/" + shm.name)
+
+
 def _untrack(shm) -> None:
     # The resource_tracker unlinks registered segments when the
     # REGISTERING process exits — correct for scratch, fatal for a fleet
     # meant to outlive its publisher. The refcount file replaces it.
-    # Only CREATED segments are registered (attach does not register on
-    # CPython 3.8-3.12), so only the create paths call this — a spurious
-    # unregister makes the tracker daemon print KeyError tracebacks.
+    # On POSIX CPython 3.8-3.12 ``SharedMemory.__init__`` registers
+    # unconditionally — for ATTACH too, not just create (3.13 added
+    # ``track=False``) — so EVERY open path must untrack, or any
+    # attached worker's tracker unlinks the segment out from under the
+    # surviving leaseholders when that worker's process tree exits.
     try:
         from multiprocessing import resource_tracker
-        resource_tracker.unregister(
-            getattr(shm, "_name", "/" + shm.name), "shared_memory")
+        resource_tracker.unregister(_tracker_name(shm), "shared_memory")
     except Exception:
         pass
+
+
+def _unlink_segment(shm) -> None:
+    # ``SharedMemory.unlink()`` also sends an UNREGISTER to the tracker
+    # daemon; every segment here was untracked at open, so the
+    # unmatched message would make the daemon print KeyError
+    # tracebacks. Re-register just before unlinking so the pair
+    # balances (on 3.13+ ``track=False`` handles would skip both).
+    if getattr(shm, "_track", True):
+        try:
+            from multiprocessing import resource_tracker
+            resource_tracker.register(_tracker_name(shm), "shared_memory")
+        except Exception:
+            pass
+    try:
+        shm.unlink()
+    except FileNotFoundError:
+        _untrack(shm)   # nothing was unlinked: take the registration back
+        raise
 
 
 # -- leases -------------------------------------------------------------------
@@ -158,13 +200,18 @@ class ShmLease:
                 return
             # last live holder out turns off the lights
             try:
-                self._shm.unlink()
+                _unlink_segment(self._shm)
             except FileNotFoundError:
                 pass
             self._shm.close()
             refs.unlink(missing_ok=True)
             man.unlink(missing_ok=True)
-        (self.spool / f"{self.digest}.lock").unlink(missing_ok=True)
+            # The lock file goes INSIDE the lock: retiring the inode
+            # while holding it is what makes _flock's revalidation
+            # sound — a contender that flocked the dying inode sees the
+            # path changed under it and retries on the fresh file, so
+            # no two holders ever pass revalidation concurrently.
+            (self.spool / f"{self.digest}.lock").unlink(missing_ok=True)
 
     def __enter__(self) -> "ShmLease":
         return self
@@ -373,4 +420,5 @@ def _attach_segment(man_path: Path):
         shm = shared_memory.SharedMemory(name=manifest["segment"])
     except FileNotFoundError:
         return None
+    _untrack(shm)   # attach REGISTERS on 3.8-3.12 too — see _untrack
     return shm

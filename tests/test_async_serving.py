@@ -24,6 +24,8 @@ use the real clock with generous timeouts (the driver is event-driven,
 so they wait on completion, never on a fixed sleep).
 """
 import asyncio
+import json
+import os
 import subprocess
 import sys
 import threading
@@ -338,6 +340,41 @@ def test_driver_exception_aborts_pending_and_surfaces(registry, X,
         driver.start()                      # no silent restart of a corpse
 
 
+def test_driver_crash_does_not_mask_body_exception(registry, X,
+                                                   monkeypatch):
+    """REGRESSION: __exit__ promised to prefer the body's exception,
+    but stop() unconditionally re-raised the crash — DriverCrashed
+    replaced the in-flight body exception (demoted to __context__)."""
+    ctrl = AdmissionController(registry, max_batch=4096)
+    ctrl.service("a")
+
+    def boom():
+        raise RuntimeError("poll exploded")
+
+    monkeypatch.setattr(ctrl, "poll", boom)
+    with pytest.raises(ValueError, match="body failed first"):
+        with AsyncDriver(ctrl) as driver:
+            ctrl.submit("a", _q(X), deadline=time.monotonic() + 0.05)
+            assert _wait(lambda: driver.crashed is not None)
+            raise ValueError("body failed first")
+    assert driver.crashed is not None       # still diagnosable after
+
+
+def test_driver_crash_still_raises_on_clean_body_exit(registry, X,
+                                                      monkeypatch):
+    ctrl = AdmissionController(registry, max_batch=4096)
+    ctrl.service("a")
+
+    def boom():
+        raise RuntimeError("poll exploded")
+
+    monkeypatch.setattr(ctrl, "poll", boom)
+    with pytest.raises(DriverCrashed):
+        with AsyncDriver(ctrl) as driver:
+            ctrl.submit("a", _q(X), deadline=time.monotonic() + 0.05)
+            assert _wait(lambda: driver.crashed is not None)
+
+
 def test_driver_rearms_on_earlier_deadline(registry, X):
     """A new submit with an EARLIER deadline must wake the parked driver
     — event-driven, not a fixed poll interval."""
@@ -462,6 +499,112 @@ def test_shm_leader_death_is_pruned(registry, X, tmp_path):
     lease.closed = True
 
 
+def test_attach_untracks_from_resource_tracker(registry, X, tmp_path,
+                                               monkeypatch):
+    """REGRESSION: on POSIX CPython 3.8-3.12, ``SharedMemory.__init__``
+    registers with the resource_tracker unconditionally — for ATTACH
+    too, not just create. Pre-fix only the create path untracked, so an
+    attached worker's tracker unlinked the live segment when that
+    worker's process tree exited, out from under surviving leaseholders
+    (masked in forked tests, which share one tracker). Every open must
+    leave the tracker balanced for this segment, and unregisters must
+    never outrun registers (tracker-daemon KeyError tracebacks)."""
+    from multiprocessing import resource_tracker
+    events = []
+    real_reg = resource_tracker.register
+    real_unreg = resource_tracker.unregister
+    monkeypatch.setattr(
+        resource_tracker, "register",
+        lambda name, rtype: (events.append((+1, name, rtype)),
+                             real_reg(name, rtype)))
+    monkeypatch.setattr(
+        resource_tracker, "unregister",
+        lambda name, rtype: (events.append((-1, name, rtype)),
+                             real_unreg(name, rtype)))
+    sm = registry.get("a")
+    d = str(tmp_path)
+    lease = shm_registry.publish(sm, "tracker-k", dir=d)
+    seg = lease._shm.name
+
+    def balance():
+        total = 0
+        for s, name, rtype in events:
+            if rtype == "shared_memory" and name.lstrip("/") == seg:
+                total += s
+                assert total >= 0           # no unmatched UNREGISTER
+        return total
+
+    assert balance() == 0                   # create path untracks
+    _, lease2 = shm_registry.attach("tracker-k", dir=d)
+    assert balance() == 0                   # THE regression: attach too
+    lease2.close()
+    lease.close()                           # last out: unlink path
+    assert balance() == 0                   # re-register/unlink balanced
+
+
+def test_attached_worker_exit_does_not_unlink_segment(registry, X,
+                                                      tmp_path):
+    """End-to-end cross-process version of the tracker regression: a
+    worker in a SEPARATE process tree (its own resource_tracker —
+    forked test children share the parent's, which masked the bug)
+    attaches, detaches cleanly, and exits. Pre-fix, the worker's
+    tracker unlinked the segment at exit, out from under the
+    publisher's live lease."""
+    import repro as repro_pkg
+    sm = registry.get("a")
+    d = str(tmp_path)
+    lease = shm_registry.publish(sm, "worker-k", dir=d)
+    code = (
+        "from repro.serve import shm_registry\n"
+        f"sm, lease = shm_registry.attach('worker-k', dir={d!r})\n"
+        "lease.close()\n"
+    )
+    src_dir = os.path.dirname(os.path.dirname(repro_pkg.__file__))
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [src_dir, os.environ.get("PYTHONPATH", "")]))
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr
+    try:
+        # the worker's exit (and its tracker's cleanup) must not have
+        # taken the fleet down with it
+        sm2, lease2 = shm_registry.attach("worker-k", dir=d)
+        lease2.close()
+    finally:
+        lease.close()
+
+
+def test_flock_retries_on_unlinked_lock_inode(tmp_path):
+    """REGRESSION: last-lease cleanup unlinks the .lock file; a
+    contender that had already opened (and then flocked) the dying
+    inode held a lock no fresh opener contends on — two processes in
+    the refcount critical section at once. ``_flock`` must detect that
+    the locked fd no longer IS the path and retry on the new file."""
+    import fcntl
+    lock = tmp_path / "x.lock"
+    f = open(lock, "a+")
+    fcntl.flock(f, fcntl.LOCK_EX)
+    f.write("doomed inode")     # marker: only the OLD inode carries it
+    f.flush()                   # (inode NUMBERS get recycled; bytes don't)
+    seen = {}
+
+    def contender():
+        with shm_registry._flock(lock):
+            seen["content"] = lock.read_text()
+
+    t = threading.Thread(target=contender)
+    t.start()
+    time.sleep(0.3)             # contender opened the doomed inode and
+    #                             is parked in flock()
+    lock.unlink()               # cleanup retires the inode UNDER the lock
+    fcntl.flock(f, fcntl.LOCK_UN)
+    f.close()
+    t.join(10.0)
+    assert not t.is_alive()
+    assert seen["content"] == ""            # body ran on the fresh inode
+
+
 def test_attach_or_publish_builds_once(registry, X, tmp_path):
     sm = registry.get("a")
     d = str(tmp_path)
@@ -479,6 +622,24 @@ def test_attach_or_publish_builds_once(registry, X, tmp_path):
             == np.asarray(sm.score(q)).tobytes())
     l1.close()
     l2.close()
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def test_cli_quota_shed_does_not_crash(tmp_path):
+    """REGRESSION: ``submit_stream`` rebound ``rejected`` without
+    ``nonlocal``, so the first QuotaExceededError raised
+    UnboundLocalError — the CLI crashed in exactly the load-shedding
+    scenario its own usage examples document."""
+    from repro.launch import serve_slab
+    out_json = tmp_path / "stats.json"
+    serve_slab.main(["--m", "48", "--requests", "8", "--min-batch", "8",
+                     "--max-batch", "64", "--models", "a=rbf:0.5",
+                     "--quota", "6", "--tol", "1e-2",
+                     "--json", str(out_json)])
+    stats = json.loads(out_json.read_text())
+    assert stats["rejected"] >= 1           # quota actually bound
+    assert stats["admitted"] + stats["rejected"] == 8
 
 
 # -- per-shape compile trap + flush-overhead estimates -----------------------
